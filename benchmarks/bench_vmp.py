@@ -1,0 +1,75 @@
+"""Paper Figure 17 + Table 4: overall time and per-stage breakdown for LDA,
+SLDA, DCMLDA — plus the MLlib-style EM-LDA baseline (section 5.1).
+
+Stage names follow Table 4: B.N. Construction / Code Generation /
+MPG Construction / Inference.  Here they map to: DSL->network build,
+trace+jit compile, observe+layout (device placement), and the iteration loop.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import models
+from repro.core.baselines import em_lda
+from repro.data import SyntheticCorpus
+
+
+def _corpus(n_docs, vocab, topics, mean_len, seed=0):
+    return SyntheticCorpus(n_docs=n_docs, vocab=vocab, n_topics=topics,
+                           mean_len=mean_len, seed=seed).generate()
+
+
+def _run_model(name, corpus, K, V, iters=10, **extra):
+    t0 = time.time()
+    m = models.make(name, alpha=0.1, beta=0.05, K=K, V=V)
+    t_build = time.time() - t0
+
+    t0 = time.time()
+    if name == "slda":
+        # sentences of ~7 tokens within docs
+        n = len(corpus["tokens"])
+        sent_of_tok = np.arange(n) // 7
+        doc_of_sent = corpus["doc_ids"][::7][:sent_of_tok.max() + 1]
+        m["x"].observe(corpus["tokens"], segment_ids=sent_of_tok.astype(np.int32))
+        m.bind("sents", doc_of_sent)
+    else:
+        m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    prog = m.compile()
+    t_observe = time.time() - t0
+
+    t0 = time.time()
+    m.infer(steps=1)                       # includes jit compile
+    t_compile = time.time() - t0
+    t0 = time.time()
+    m.infer(steps=iters)
+    t_infer = time.time() - t0
+    return {"build_s": t_build, "metadata_s": t_observe,
+            "codegen_s": t_compile, "infer_s": t_infer,
+            "per_iter_s": t_infer / iters,
+            "elbo": m.lower_bound, "n_tokens": len(corpus["tokens"])}
+
+
+def run(report):
+    K, V = 16, 2000
+    corpus = _corpus(n_docs=400, vocab=V, topics=K, mean_len=120)
+    n = len(corpus["tokens"])
+
+    for name in ("lda", "slda", "dcmlda"):
+        r = _run_model(name, corpus, K, V)
+        report(f"vmp_{name}_per_iter", r["per_iter_s"] * 1e6,
+               f"tokens={n};elbo={r['elbo']:.0f};"
+               f"words_per_s={n / r['per_iter_s']:.0f}")
+        report(f"vmp_{name}_breakdown_us", r["codegen_s"] * 1e6,
+               f"build={r['build_s']*1e3:.1f}ms;meta={r['metadata_s']*1e3:.1f}ms;"
+               f"codegen={r['codegen_s']*1e3:.1f}ms;"
+               f"infer10={r['infer_s']*1e3:.1f}ms")
+
+    # EM-LDA (MLlib analogue): faster per iteration, MAP-only
+    t0 = time.time()
+    em_lda(corpus["tokens"], corpus["doc_ids"], K, V, iters=10)
+    t_em = (time.time() - t0) / 10
+    report("vmp_em_lda_baseline_per_iter", t_em * 1e6,
+           f"map_only=true;words_per_s={n / t_em:.0f}")

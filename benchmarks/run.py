@@ -1,0 +1,34 @@
+"""Benchmark registry — one module per paper table/figure.
+
+    bench_vmp        Figure 17 + Table 4 (overall time, stage breakdown,
+                     EM-LDA/MLlib baseline)
+    bench_scaling    Figures 18-19 (scale-up / scale-out)
+    bench_partition  Figure 20 + Tables 1-2 (partition strategies, analytic
+                     + measured, replicated-memory anecdote)
+    bench_kernels    VMP hot-loop primitives
+
+Prints ``name,us_per_call,derived`` CSV.  Select modules with
+``python -m benchmarks.run [vmp|scaling|partition|kernels] ...``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def _report(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def main() -> None:
+    from benchmarks import bench_kernels, bench_partition, bench_scaling, bench_vmp
+    mods = {"vmp": bench_vmp, "scaling": bench_scaling,
+            "partition": bench_partition, "kernels": bench_kernels}
+    picks = [a for a in sys.argv[1:] if a in mods] or list(mods)
+    print("name,us_per_call,derived")
+    for p in picks:
+        mods[p].run(_report)
+
+
+if __name__ == "__main__":
+    main()

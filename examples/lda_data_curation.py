@@ -1,0 +1,75 @@
+"""Statistical inference at scale feeding LM training — the production role
+InferSpark was built for.
+
+Pipeline:
+  1. run distributed LDA (the paper's flagship model) over the LM training
+     corpus to infer its topic mixture,
+  2. derive per-domain sampling weights from the posterior (upweight the
+     rarest topics: a simple curation policy),
+  3. train a small LM on the reweighted stream.
+
+    PYTHONPATH=src python examples/lda_data_curation.py
+"""
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs import ARCHS, RunConfig
+from repro.core import models
+from repro.data import SyntheticCorpus, TokenStream
+from repro.launch.train import train
+
+
+def main():
+    # -- 1. infer the corpus' topic mixture with the paper's system --------
+    k = 6
+    corpus = SyntheticCorpus(n_docs=200, vocab=1200, n_topics=k,
+                             mean_len=100, seed=7).generate()
+    m = models.make("lda", alpha=0.1, beta=0.05, K=k, V=1200)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    m.infer(steps=25)
+    theta = m["theta"].get_result()
+    mix = theta.sum(0)
+    mix = mix / mix.sum()
+    print(f"[curate] inferred topic mixture: {np.round(mix, 3)}")
+
+    # -- 2. curation policy: inverse-propensity weights --------------------
+    w = (1.0 / np.maximum(mix, 1e-3))
+    w = w / w.sum()
+    print(f"[curate] sampling weights:      {np.round(w, 3)}")
+
+    # -- 3. train a small LM on the reweighted stream ----------------------
+    cfg = dataclasses.replace(ARCHS["olmo-1b"].reduced(), n_layers=2)
+    run = RunConfig(seq_len=64, global_batch=8, dtype="float32",
+                    learning_rate=3e-3, warmup=0)
+    stream = TokenStream(vocab=cfg.vocab, seq_len=64, batch=8, seed=0,
+                         weights=w)
+
+    # train() builds its own stream; do a short manual loop to use ours
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import build_train_step, jit_train_step
+    from repro.models import make_model
+    from repro.optim import adamw_init
+
+    mesh = make_host_mesh()
+    built = build_train_step(cfg, run, mesh)
+    model = make_model(cfg)
+    params = model["init"](run, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    b0 = stream.batch_at(0)
+    babs = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), b0)
+    fn = jit_train_step(built, mesh, babs)
+    for i in range(10):
+        batch = stream.batch_at(i)
+        params, opt, met = fn(params, opt, batch, jnp.int32(i))
+        if i % 2 == 0:
+            print(f"[curate] LM step {i:2d} loss {float(met['loss']):.4f}")
+    print("[curate] done: LDA-inferred weights drove the LM data mix")
+
+
+if __name__ == "__main__":
+    main()

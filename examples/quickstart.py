@@ -1,0 +1,58 @@
+"""Quickstart: the paper's Figure 7 experience end to end.
+
+Define the two-coin model in a handful of DSL lines, observe tosses, run
+VMP, and query the posterior — then the same workflow for LDA.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import models
+from repro.data import SyntheticCorpus
+
+
+def two_coins():
+    print("== two-coin model (paper Figure 7) ==")
+    rng = np.random.default_rng(0)
+    # flip one of two hidden coins 2000 times
+    pick = rng.random(2000) < 0.6
+    x = np.where(pick, rng.random(2000) < 0.85,
+                 rng.random(2000) < 0.2).astype(np.int32)
+
+    m = models.make("two_coins", alpha=1.0, beta=1.0)
+    m["x"].observe(x)
+    m.infer(steps=30)
+    print(f"ELBO: {m.lower_bound:.2f}")
+    print("posterior Beta parameters per coin:\n", m["phi"].get_result())
+    print("posterior predictive P(head):",
+          round(float(x.mean()), 3), "(empirical)")
+
+
+def lda():
+    print("\n== LDA (paper Figure 1: the 7-line model) ==")
+    corpus = SyntheticCorpus(n_docs=100, vocab=500, n_topics=8,
+                             mean_len=100, seed=1).generate()
+    m = models.make("lda", alpha=0.1, beta=0.05, K=8, V=500)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+
+    trace = []
+
+    def progress(i, elbo):
+        trace.append(elbo)
+        if i % 5 == 0:
+            print(f"  iter {i:3d}  ELBO {elbo:.1f}")
+        # paper Figure 12: stop when the improvement is small
+        return len(trace) < 2 or trace[-1] - trace[-2] > 1e-4 * abs(trace[-2])
+
+    m.infer(steps=60, callback=progress)
+    phi = m["phi"].get_result()
+    top = np.argsort(-phi, axis=1)[:, :5]
+    print("top words per topic (ids):")
+    for k in range(8):
+        print(f"  topic {k}: {top[k].tolist()}")
+
+
+if __name__ == "__main__":
+    two_coins()
+    lda()

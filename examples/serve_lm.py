@@ -1,0 +1,38 @@
+"""Batched LM serving: prefill a batch of prompts, decode greedily with a
+donated KV cache (reduced olmo config on CPU; same code path the
+decode_32k/long_500k dry-run cells lower for the production meshes).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch olmo-1b] [--batch 4]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs import RunConfig, get_arch
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    run = RunConfig(seq_len=args.prompt_len, global_batch=args.batch,
+                    dtype="float32")
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    toks, stats = serve(cfg, run, prompts, new_tokens=args.new_tokens)
+    print(f"[serve] {cfg.name}: prefill {stats['prefill_s']*1e3:.1f} ms, "
+          f"{stats['tokens_per_s']:.1f} tok/s over {args.batch} streams")
+    for b in range(min(args.batch, 2)):
+        print(f"[serve] stream {b}: {toks[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

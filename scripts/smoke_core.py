@@ -1,0 +1,62 @@
+"""Quick manual validation of the core VMP engine (not a pytest)."""
+import numpy as np
+
+from repro.core import models
+
+rng = np.random.default_rng(0)
+
+# --- synthetic LDA corpus with planted topics ---
+K, V, D = 4, 50, 60
+true_phi = rng.dirichlet(np.full(V, 0.05), size=K)
+true_theta = rng.dirichlet(np.full(K, 0.2), size=D)
+doc_len = rng.integers(20, 60, size=D)
+toks, docs = [], []
+for d in range(D):
+    zs = rng.choice(K, size=doc_len[d], p=true_theta[d])
+    for z in zs:
+        toks.append(rng.choice(V, p=true_phi[z]))
+        docs.append(d)
+toks, docs = np.array(toks), np.array(docs)
+
+m = models.make("lda", alpha=0.1, beta=0.1, K=K, V=V)
+m["x"].observe(toks, segment_ids=docs)
+m.infer(steps=30)
+trace = m.elbo_trace
+print("ELBO trace:", [round(t, 2) for t in trace[:5]], "...", round(trace[-1], 2))
+diffs = np.diff(trace)
+print("monotone:", bool((diffs >= -1e-3).all()), "min diff:", diffs.min())
+phi_post = m["phi"].get_result()
+print("phi posterior shape:", phi_post.shape)
+
+# --- two coins ---
+m2 = models.make("two_coins")
+x = (rng.random(500) < np.where(rng.random(500) < 0.7, 0.9, 0.2)).astype(int)
+m2["x"].observe(x)
+m2.infer(steps=25)
+print("two_coins ELBO:", round(m2.lower_bound, 2),
+      "monotone:", bool((np.diff(m2.elbo_trace) >= -1e-3).all()))
+print("phi posterior:\n", m2["phi"].get_result())
+
+# --- SLDA ---
+S = 150
+sent_doc = np.sort(rng.integers(0, 20, size=S))
+tok_sent = np.repeat(np.arange(S), rng.integers(3, 8, size=S))
+xs = rng.integers(0, 30, size=len(tok_sent))
+m3 = models.make("slda", alpha=0.1, beta=0.1, K=3, V=30)
+m3["x"].observe(xs, segment_ids=tok_sent)
+m3.bind("sents", sent_doc)
+m3.infer(steps=15)
+print("slda ELBO monotone:", bool((np.diff(m3.elbo_trace) >= -1e-3).all()))
+
+# --- DCMLDA ---
+m4 = models.make("dcmlda", alpha=0.5, beta=0.5, K=3, V=30)
+m4["x"].observe(xs % 30, segment_ids=(tok_sent % 10))
+m4.infer(steps=15)
+print("dcmlda ELBO monotone:", bool((np.diff(m4.elbo_trace) >= -1e-3).all()))
+
+# --- naive bayes ---
+m5 = models.make("naive_bayes", alpha=1.0, beta=0.5, C=2, V=30)
+m5["x"].observe(xs, segment_ids=tok_sent % 12)
+m5.infer(steps=15)
+print("nb ELBO monotone:", bool((np.diff(m5.elbo_trace) >= -1e-3).all()))
+print("OK")

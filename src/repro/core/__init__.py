@@ -1,0 +1,9 @@
+"""InferSpark's contribution, reproduced in JAX: a probabilistic-programming
+layer (DSL -> Bayesian network -> compiled VMP program) with a distributed,
+fault-tolerant runtime."""
+
+from .dsl import Model, ModelBuilder, build  # noqa: F401
+from .network import BayesianNetwork, CategoricalRV, DirichletRV, Plate  # noqa: F401
+from .compiler import VMPProgram, compile_program  # noqa: F401
+from .vmp import VMPState, full_elbo, init_state  # noqa: F401
+from . import models  # noqa: F401

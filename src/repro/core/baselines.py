@@ -1,0 +1,51 @@
+"""Baselines the paper compares against.
+
+- EM-LDA: the MLlib-style expectation-maximization LDA (paper section 5.1):
+  point (MAP) estimates of theta/phi instead of full posteriors.  Faster per
+  iteration and specific to LDA — exactly the paper's framing of MLlib vs
+  InferSpark ("C++ programs vs DBMS").
+- replicated VMP ("Infer.NET analogue"): available through
+  ``partition.ShardingPlan(strategy="replicated")`` plus a memory model in
+  ``benchmarks/bench_partition.py`` (the paper's 512GB-exceeded anecdote).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def em_lda(tokens: np.ndarray, doc_ids: np.ndarray, K: int, V: int,
+           alpha: float = 0.1, beta: float = 0.1, iters: int = 20,
+           seed: int = 0):
+    """MAP EM for LDA; returns (theta (D,K), phi (K,V), log-lik trace)."""
+    D = int(doc_ids.max()) + 1
+    toks = jnp.asarray(tokens)
+    docs = jnp.asarray(doc_ids)
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.dirichlet(key, jnp.full((K,), 1.0), (D,))
+    phi = jax.random.dirichlet(jax.random.fold_in(key, 1),
+                               jnp.full((V,), 1.0), (K,))
+
+    @jax.jit
+    def step(theta, phi):
+        # E: responsibilities r_ik ∝ theta[d_i,k] * phi[k, w_i]
+        p = theta[docs] * phi[:, toks].T                 # (N, K)
+        norm = p.sum(-1, keepdims=True)
+        r = p / jnp.maximum(norm, 1e-30)
+        ll = jnp.log(jnp.maximum(norm[:, 0], 1e-30)).sum()
+        # M: MAP with Dirichlet priors
+        th = jax.ops.segment_sum(r, docs, num_segments=D) + (alpha - 1.0)
+        th = jnp.maximum(th, 1e-9)
+        th = th / th.sum(-1, keepdims=True)
+        ph = jax.ops.segment_sum(r, toks, num_segments=V).T + (beta - 1.0)
+        ph = jnp.maximum(ph, 1e-9)
+        ph = ph / ph.sum(-1, keepdims=True)
+        return th, ph, ll
+
+    trace = []
+    for _ in range(iters):
+        theta, phi, ll = step(theta, phi)
+        trace.append(float(ll))
+    return np.asarray(theta), np.asarray(phi), trace

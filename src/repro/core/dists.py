@@ -1,0 +1,62 @@
+"""Exponential-family primitives for the conjugate class InferSpark supports.
+
+The paper's prototype (and therefore this reproduction's core) covers
+*mixtures of Categorical distributions with Dirichlet/Beta priors* (paper
+section 8).  Everything VMP needs for that class is here:
+
+  - Dirichlet expectations  E[log theta_k] = digamma(a_k) - digamma(sum a)
+  - Dirichlet log-normalizer / KL (the per-node ELBO contribution)
+  - Beta is Dirichlet with dim=2 throughout the stack.
+
+All functions are pure jnp and jit-safe.  The Pallas kernel in
+``repro.kernels.dirichlet_expectation`` accelerates :func:`dirichlet_expectation`
+on TPU; callers go through ``repro.kernels.ops`` which falls back to these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import digamma, gammaln
+
+
+def dirichlet_expectation(alpha: jax.Array) -> jax.Array:
+    """E_q[log theta] for rows of Dirichlet parameters.
+
+    alpha: (..., K) positive concentration parameters.
+    returns: (..., K)  digamma(alpha) - digamma(alpha.sum(-1, keepdims=True))
+    """
+    return digamma(alpha) - digamma(alpha.sum(axis=-1, keepdims=True))
+
+
+def dirichlet_log_norm(alpha: jax.Array) -> jax.Array:
+    """log B(alpha) = sum lgamma(alpha_k) - lgamma(sum alpha_k), rowwise."""
+    return gammaln(alpha).sum(axis=-1) - gammaln(alpha.sum(axis=-1))
+
+
+def dirichlet_elbo_term(prior: jax.Array, post: jax.Array,
+                        elog: jax.Array | None = None) -> jax.Array:
+    """E_q[log p(theta)] - E_q[log q(theta)] summed over rows.
+
+    ``prior`` broadcasts against ``post`` (priors are usually symmetric
+    scalars expanded lazily).  ``elog`` may be supplied to reuse an already
+    computed expectation table.
+    """
+    if elog is None:
+        elog = dirichlet_expectation(post)
+    prior = jnp.broadcast_to(prior, post.shape)
+    term = dirichlet_log_norm(post) - dirichlet_log_norm(prior)
+    term = term + ((prior - post) * elog).sum(axis=-1)
+    return term.sum()
+
+
+def categorical_entropy(r: jax.Array, axis: int = -1) -> jax.Array:
+    """-sum r log r with the 0 log 0 = 0 convention."""
+    return -jnp.sum(r * jnp.log(jnp.where(r > 0, r, 1.0)), axis=axis)
+
+
+def softmax_rows(logits: jax.Array) -> jax.Array:
+    """Numerically stable softmax over the trailing axis."""
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    e = jnp.exp(logits - m)
+    return e / e.sum(axis=-1, keepdims=True)

@@ -1,0 +1,390 @@
+"""The paper's partitioning strategy (section 4.4), TPU-native.
+
+InferSpark's insight: the message-passing graph of a mixture model decomposes
+into independent trees rooted at the per-document posteriors, whose leaves
+form a complete bipartite graph with a *small* set of shared posteriors.  So:
+co-locate each tree (document: its theta row, its z's, its x's) in one
+partition, and replicate only the small shared posteriors (phi) —
+`E[N_xi] = 1`, `E[N_B] = 3N/M + K` (paper Tables 1-2).
+
+On a TPU mesh the same plan becomes an SPMD layout:
+
+  - the outermost ``?`` plate (documents) is the partition key;
+  - documents are packed onto shards by greedy LPT on token counts (the
+    paper's straggler source — token skew — is removed statically);
+  - every "tree-local" array (z responsibilities, tokens, theta rows) is
+    sharded along the mesh data axes with that packing;
+  - Dirichlets whose plate chain is rooted at the partition plate are LOCAL
+    (their stats never leave the shard — zero communication, like theta and
+    DCMLDA's per-doc phi); all others are GLOBAL (replicated, one psum of
+    their (G, K) stats per iteration — the only collective in the hot loop).
+
+``strategy="gspmd"`` instead hands the flat arrays to jit with sharding
+hints and lets XLA's generic partitioner place everything — the analogue of
+GraphX's built-in strategies, and the baseline in benchmarks/bench_partition.
+``strategy="replicated"`` is the single-machine (Infer.NET) layout.
+
+This module also carries the paper's analytic cost models (Tables 1-2) for
+all five strategies; benchmarks print them side by side with measured HLO
+collective bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .compiler import VMPProgram
+from .vmp import VMPState, _step_body, init_state
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Mesh
+    axes: tuple[str, ...]                # mesh axes carrying the data plates
+    strategy: str = "inferspark"         # inferspark | gspmd | replicated
+
+    @property
+    def n_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+
+
+def lpt_pack(weights: np.ndarray, m: int) -> np.ndarray:
+    """Greedy longest-processing-time packing: group -> shard.
+
+    This is the load balancer: the paper's partitioner keeps each tree whole;
+    we additionally equalize token mass so no SPMD shard straggles.
+    """
+    order = np.argsort(-weights, kind="stable")
+    load = np.zeros(m, dtype=np.int64)
+    assign = np.zeros(len(weights), dtype=np.int32)
+    for g in order:
+        s = int(np.argmin(load))
+        assign[g] = s
+        load[s] += int(weights[g])
+    return assign
+
+
+def _pack_indices(shard: np.ndarray, m: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Given per-instance shard ids, build (gather (m, cap), mask (m, cap),
+    local_index (n,)): stacked padded layout + inverse map."""
+    counts = np.bincount(shard, minlength=m)
+    cap = max(1, int(counts.max()))
+    gather = np.zeros((m, cap), dtype=np.int64)
+    mask = np.zeros((m, cap), dtype=np.float32)
+    local = np.zeros(len(shard), dtype=np.int32)
+    cursor = np.zeros(m, dtype=np.int64)
+    for i, s in enumerate(shard):
+        j = cursor[s]
+        gather[s, j] = i
+        mask[s, j] = 1.0
+        local[i] = j
+        cursor[s] += 1
+    return gather, mask, local
+
+
+@dataclasses.dataclass
+class _Layout:
+    """All numpy metadata needed to run the explicit co-partitioned step."""
+    m: int
+    group_shard: np.ndarray                       # (n_groups,)
+    local_dirs: frozenset
+    dir_row: dict                                 # name -> dict(gather, mask, local, cap)
+    lat: dict                                     # name -> dict(...)
+    arrays: dict                                  # stacked device-ready arrays
+    shadow: VMPProgram                            # program with local shapes
+
+
+def build_layout(program: VMPProgram, m: int) -> _Layout:
+    n_groups = program.meta.get("pstar_size")
+    if n_groups is None:
+        raise ValueError(
+            f"model {program.name} has no '?' partition plate; use "
+            f"strategy='replicated'")
+
+    # token mass per group drives the packing
+    weights = np.zeros(n_groups, dtype=np.int64)
+    for spec in program.latents:
+        if spec.group is None:
+            raise ValueError(f"latent {spec.name} is not under the partition "
+                             f"plate; use strategy='replicated'")
+        for f in spec.children:
+            tok_group = spec.group[f.zmap] if f.zmap is not None else spec.group
+            np.add.at(weights, tok_group, 1)
+    for s in program.statics:
+        if s.group is not None:
+            np.add.at(weights, s.group, 1)
+    group_shard = lpt_pack(np.maximum(weights, 1), m)
+
+    import dataclasses as dc
+    dir_row: dict[str, dict] = {}
+    local_dirs = set()
+    shadow_dirs = {}
+    for name, d in program.dirichlets.items():
+        if d.group_rows is not None:
+            local_dirs.add(name)
+            rs = group_shard[d.group_rows]
+            gather, mask, local = _pack_indices(rs, m)
+            dir_row[name] = {"gather": gather, "mask": mask, "local": local,
+                             "cap": gather.shape[1]}
+            shadow_dirs[name] = dc.replace(d, g=gather.shape[1])
+        else:
+            shadow_dirs[name] = d
+
+    arrays: dict[str, dict] = {}
+    lat: dict[str, dict] = {}
+    shadow_lats = []
+    for spec in program.latents:
+        z_shard = group_shard[spec.group]
+        z_gather, z_mask, z_local = _pack_indices(z_shard, m)
+        cap_z = z_gather.shape[1]
+        if spec.prior_dir in local_dirs:
+            pr_local = dir_row[spec.prior_dir]["local"][spec.prior_rows]
+        else:
+            pr_local = spec.prior_rows
+        arrays[spec.name] = {
+            "prior_rows": pr_local[z_gather],         # (m, cap_z)
+            "mask": z_mask,
+        }
+        lat[spec.name] = {"gather": z_gather, "mask": z_mask,
+                          "local": z_local, "cap": cap_z}
+        shadow_children = []
+        for f in spec.children:
+            tok_shard = z_shard[f.zmap] if f.zmap is not None else z_shard
+            t_gather, t_mask, _ = _pack_indices(tok_shard, m)
+            zmap_g = f.zmap if f.zmap is not None else np.arange(spec.n)
+            base = f.base
+            if base is not None and f.dir_name in local_dirs:
+                base = dir_row[f.dir_name]["local"][base]
+            arrays[f.x_name] = {
+                "values": f.values[t_gather],
+                "zmap": z_local[zmap_g][t_gather],
+                "base": None if base is None else base[t_gather],
+                "mask": t_mask,
+            }
+            shadow_children.append(dc.replace(f, n_z=cap_z))
+        shadow_lats.append(dc.replace(spec, n=cap_z, children=shadow_children))
+
+    shadow_statics = []
+    for s in program.statics:
+        if s.group is None:
+            raise ValueError(f"static factor {s.x_name} not partitionable")
+        x_shard = group_shard[s.group]
+        gather, mask, _ = _pack_indices(x_shard, m)
+        rows = s.rows
+        if s.dir_name in local_dirs:
+            rows = dir_row[s.dir_name]["local"][rows]
+        arrays[s.x_name] = {"rows": rows[gather], "values": s.values[gather],
+                            "mask": mask}
+        shadow_statics.append(s)
+
+    shadow = dataclasses.replace(program, dirichlets=shadow_dirs,
+                                 latents=shadow_lats, statics=shadow_statics)
+    return _Layout(m, group_shard, frozenset(local_dirs), dir_row, lat,
+                   arrays, shadow)
+
+
+# ---------------------------------------------------------------------------
+# the distributed step
+# ---------------------------------------------------------------------------
+
+def _tree_map_none(fn, d):
+    return {k: (None if v is None else fn(v)) for k, v in d.items()}
+
+
+def make_distributed_step(program: VMPProgram, plan: ShardingPlan, seed: int = 0):
+    """Returns (step_fn, initial_state) for the chosen strategy."""
+    if plan.strategy == "replicated":
+        from .runtime import make_step
+        return make_step(program), init_state(program, seed)
+    if plan.strategy == "gspmd":
+        return _make_gspmd_step(program, plan, seed)
+    if plan.strategy != "inferspark":
+        raise ValueError(f"unknown strategy {plan.strategy!r}")
+
+    mesh, axes, m = plan.mesh, plan.axes, plan.n_shards
+    layout = build_layout(program, m)
+    shard1 = NamedSharding(mesh, P(axes))                 # dim0 = shard
+    repl = NamedSharding(mesh, P())
+
+    # device-resident stacked arrays
+    dev_arrays = {
+        name: _tree_map_none(
+            lambda a: jax.device_put(jnp.asarray(a), shard1), sub)
+        for name, sub in layout.arrays.items()
+    }
+
+    # initial state: global init scattered into the local layout
+    g0 = init_state(program, seed)
+    posts = {}
+    for name, d in program.dirichlets.items():
+        if name in layout.local_dirs:
+            info = layout.dir_row[name]
+            local = np.asarray(g0.posteriors[name])[info["gather"]]
+            prior = np.broadcast_to(np.asarray(d.prior, np.float32),
+                                    local.shape[-2:])
+            local = np.where(info["mask"][..., None] > 0, local, prior)
+            posts[name] = jax.device_put(jnp.asarray(local), shard1)
+        else:
+            posts[name] = jax.device_put(g0.posteriors[name], repl)
+    state0 = VMPState(posts, jnp.zeros((), jnp.int32))
+
+    in_state_specs = VMPState(
+        {n: (P(axes) if n in layout.local_dirs else P())
+         for n in program.dirichlets},
+        P())
+    arr_specs = {name: _tree_map_none(lambda a: P(axes), sub)
+                 for name, sub in layout.arrays.items()}
+
+    def body(state: VMPState, arrays):
+        # strip the leading shard dim from everything local
+        sq_arrays = {k: _tree_map_none(lambda a: a[0], v)
+                     for k, v in arrays.items()}
+        sq_posts = {n: (p[0] if n in layout.local_dirs else p)
+                    for n, p in state.posteriors.items()}
+        sq = VMPState(sq_posts, state.step)
+        new, elbo, _ = _step_body(layout.shadow, sq_arrays, sq,
+                                  axis_names=axes,
+                                  local_dirs=layout.local_dirs,
+                                  n_replicas=m)
+        out_posts = {n: (p[None] if n in layout.local_dirs else p)
+                     for n, p in new.posteriors.items()}
+        return VMPState(out_posts, new.step), elbo
+
+    sharded = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(in_state_specs, arr_specs),
+        out_specs=(in_state_specs, P()),
+        check_vma=False)
+    compiled = jax.jit(sharded, donate_argnums=(0,))
+
+    def step(state):
+        return compiled(state, dev_arrays)
+
+    step.layout = layout          # for gather_posterior / benchmarks
+    step.plan = plan
+    step.jit_fn = compiled        # for dry-run lowering / cost analysis
+    step.dev_arrays = dev_arrays
+    return step, state0
+
+
+def _make_gspmd_step(program: VMPProgram, plan: ShardingPlan, seed: int):
+    """Generic-partitioner baseline: flat arrays with sharding hints, XLA
+    chooses the collectives (the 'GraphX built-in strategy' analogue)."""
+    from .vmp import _program_arrays
+    mesh, axes = plan.mesh, plan.axes
+    m = plan.n_shards
+    shard1 = NamedSharding(mesh, P(axes))
+    repl = NamedSharding(mesh, P())
+
+    arrays = _program_arrays(program)
+
+    def _pad_to_m(a):
+        n = a.shape[0]
+        pad = (-n) % m
+        return jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)), n
+
+    dev = {}
+    for name, sub in arrays.items():
+        dev[name] = {}
+        for k, v in sub.items():
+            if v is None:
+                dev[name][k] = None
+            else:
+                padded, n = _pad_to_m(v)
+                dev[name][k] = jax.device_put(padded, shard1)
+        # padded tail instances must not contribute (tokens AND latents)
+        ref_key = "values" if sub.get("values") is not None else "prior_rows"
+        if sub.get(ref_key) is not None:
+            n = sub[ref_key].shape[0]
+            pad = (-n) % m
+            mask = jnp.pad(jnp.ones((n,), jnp.float32), (0, pad))
+            dev[name]["mask"] = jax.device_put(mask, shard1)
+
+    # shadow program with padded plate sizes
+    import dataclasses as dc
+    pad_n = {spec.name: spec.n + ((-spec.n) % m) for spec in program.latents}
+    shadow_lats = [dc.replace(spec, n=pad_n[spec.name],
+                              children=[dc.replace(f, n_z=pad_n[spec.name])
+                                        for f in spec.children])
+                   for spec in program.latents]
+    shadow = dc.replace(program, latents=shadow_lats)
+
+    def body(state, arrays):
+        new, elbo, _ = _step_body(shadow, arrays, state)
+        return new, elbo
+
+    state0 = init_state(program, seed)
+    state0 = VMPState({n: jax.device_put(p, repl)
+                       for n, p in state0.posteriors.items()},
+                      jnp.zeros((), jnp.int32))
+    compiled = jax.jit(body, donate_argnums=(0,))
+
+    def step(state):
+        return compiled(state, dev)
+
+    step.plan = plan
+    return step, state0
+
+
+def gather_posterior(step, program: VMPProgram, state: VMPState, name: str):
+    """Reassemble a Dirichlet posterior from a distributed state."""
+    layout: Optional[_Layout] = getattr(step, "layout", None)
+    post = np.asarray(state.posteriors[name])
+    if layout is None or name not in layout.local_dirs:
+        return post
+    info = layout.dir_row[name]
+    g = program.dirichlets[name].g
+    out = np.zeros((g, post.shape[-1]), post.dtype)
+    flat_idx = info["gather"].reshape(-1)
+    flat_mask = info["mask"].reshape(-1) > 0
+    out[flat_idx[flat_mask]] = post.reshape(-1, post.shape[-1])[flat_mask]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paper Tables 1-2: analytic strategy costs
+# ---------------------------------------------------------------------------
+
+def strategy_costs(n: int, d: int, k: int, m: int) -> dict[str, dict]:
+    """Expected replications of a data vertex E[N_xi] and expected size of
+    the largest edge partition E[N_B], for each partitioning strategy
+    (paper section 4.4).  n=tokens, d=documents, k=shared posteriors,
+    m=partitions."""
+    eta = n / m
+    out = {
+        "1D":   {"E_Nxi": min(k + 1, m), "E_NB": float(n)},
+        "2D":   {"E_Nxi": min(k + 1, math.sqrt(m)),
+                 "E_NB": min(k + 1, math.sqrt(m)) * eta},
+        "RVC":  {"E_Nxi": m * (1 - (1 - 1 / m) ** (k + 1)),
+                 "E_NB": min(float(k) * eta + eta, float(n))},
+        "CRVC": {"E_Nxi": m * (1 - (1 - 1 / m) ** (k + 1)),
+                 "E_NB": min(float(k) * eta + eta, float(n))},
+        "InferSpark": {"E_Nxi": 1.0, "E_NB": 3 * eta + k},
+    }
+    return out
+
+
+def collective_bytes_per_iteration(program: VMPProgram, plan: ShardingPlan,
+                                   bytes_per_el: int = 4) -> dict[str, int]:
+    """Analytic per-iteration communication volume of the explicit layout:
+    one all-reduce of every GLOBAL Dirichlet's (G, K) stats.  Local
+    Dirichlets move zero bytes — the paper's zero-replication claim."""
+    out = {}
+    for name, dspec in program.dirichlets.items():
+        if dspec.group_rows is None:
+            # ring all-reduce moves ~2x the payload per participant
+            out[name] = 2 * dspec.g * dspec.k * bytes_per_el
+        else:
+            out[name] = 0
+    return out

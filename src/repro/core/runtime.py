@@ -1,0 +1,70 @@
+"""Inference execution: the paper's section 4.3 ("Execution") analogue.
+
+Runs the jitted VMP step in a loop with:
+  - the paper's callback API (Figure 12): ``callback(iteration, elbo) ->
+    bool`` — return False to stop early (e.g. small ELBO improvement);
+  - checkpoint-every-k with crash resume (paper section 4.2's lineage
+    checkpointing, repurposed for fault tolerance);
+  - buffer donation so posterior updates are in-place in HBM (the paper's
+    cache/anti-cache dance: GraphX had to materialize + evict the previous
+    graph; XLA donation makes the old state's buffers the new state's).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from ..checkpoint import CheckpointStore
+from .compiler import VMPProgram
+from .vmp import VMPState, _program_arrays, _step_body, init_state
+
+
+def make_step(program: VMPProgram, donate: bool = True):
+    arrays = _program_arrays(program)
+
+    def step(state: VMPState):
+        new_state, elbo, _ = _step_body(program, arrays, state)
+        return new_state, elbo
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def run_inference(program: VMPProgram, steps: int = 20,
+                  callback: Optional[Callable] = None,
+                  checkpoint_every: int = 0,
+                  checkpoint_dir: Optional[str] = None,
+                  state: Optional[VMPState] = None,
+                  seed: int = 0,
+                  step_fn=None):
+    """Run ``steps`` VMP iterations; returns (state, elbo_trace)."""
+    if step_fn is None:
+        if program.meta.get("sharding") is not None:
+            from .partition import make_distributed_step
+            step_fn, state0 = make_distributed_step(
+                program, program.meta["sharding"], seed=seed)
+            state = state or state0
+        else:
+            step_fn = make_step(program)
+    if state is None:
+        state = init_state(program, seed)
+
+    store = None
+    if checkpoint_every and checkpoint_dir:
+        store = CheckpointStore(checkpoint_dir, every=checkpoint_every)
+        latest = store.latest()
+        if latest is not None:
+            state = store.restore(state)
+
+    trace: list[float] = []
+    start = int(state.step)
+    for i in range(start, start + steps):
+        state, elbo = step_fn(state)
+        elbo_f = float(elbo)
+        trace.append(elbo_f)
+        if store is not None:
+            store.maybe_save(i + 1, state)
+        if callback is not None and callback(i, elbo_f) is False:
+            break
+    return state, trace

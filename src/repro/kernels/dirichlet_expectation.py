@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: rowwise Dirichlet log-expectation.
+
+E[log theta]_gk = digamma(alpha_gk) - digamma(sum_k alpha_gk)
+
+This is the VMP hot-loop's table builder: it runs every iteration over every
+Dirichlet posterior — (D, K) for per-document topic mixtures (D ~ 1e6+ rows)
+and (K, V) for topic-word posteriors (V up to 262k lanes).  One VMEM pass
+computes both digammas; digamma itself is inlined (recurrence shift by 8 +
+asymptotic series), since TPU has no digamma primitive.
+
+Tiling: the grid is 1-D over row blocks; each block is (block_rows, K) so the
+row reduction stays inside the block.  block_rows is chosen so a block fits
+comfortably in VMEM (~4 MB of the ~16 MB/core on v5e); K is padded to the
+128-lane boundary by the wrapper (padding value 1.0, with the row-sum
+corrected by the statically known pad count).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_VMEM_BUDGET = 4 * 1024 * 1024        # bytes per input block
+_LANE = 128
+
+
+def _digamma(x: jax.Array) -> jax.Array:
+    """digamma via psi(x) = psi(x+8) - sum_{i<8} 1/(x+i), then the asymptotic
+    series at x+8 (accurate to ~1e-7 rel for x > 0 in float32)."""
+    acc = jnp.zeros_like(x)
+    for _ in range(8):
+        acc = acc + 1.0 / x
+        x = x + 1.0
+    inv = 1.0 / x
+    inv2 = inv * inv
+    series = (jnp.log(x) - 0.5 * inv
+              - inv2 * (1.0 / 12.0 - inv2 * (1.0 / 120.0 - inv2 / 252.0)))
+    return series - acc
+
+
+def _kernel(alpha_ref, out_ref, *, pad_cols: int):
+    a = alpha_ref[...]
+    # padded lanes hold 1.0 each; remove their contribution from the row sum
+    row_sum = a.sum(axis=-1, keepdims=True) - float(pad_cols)
+    out_ref[...] = _digamma(a) - _digamma(row_sum)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dirichlet_expectation(alpha: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Pallas-backed E[log theta]; matches ref.dirichlet_expectation."""
+    if alpha.ndim != 2:
+        raise ValueError("expected (rows, K)")
+    g, k = alpha.shape
+    kp = max(_LANE, (k + _LANE - 1) // _LANE * _LANE)
+    block_rows = max(1, min(512, _VMEM_BUDGET // (kp * 4)))
+    gp = (g + block_rows - 1) // block_rows * block_rows
+
+    a = jnp.pad(alpha.astype(jnp.float32),
+                ((0, gp - g), (0, kp - k)), constant_values=1.0)
+    out = pl.pallas_call(
+        functools.partial(_kernel, pad_cols=kp - k),
+        grid=(gp // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, kp), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, kp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, kp), jnp.float32),
+        interpret=interpret,
+    )(a)
+    return out[:g, :k].astype(alpha.dtype)

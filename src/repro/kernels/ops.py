@@ -1,0 +1,51 @@
+"""Jit'd dispatch layer over the Pallas kernels.
+
+On TPU the Pallas kernels run compiled; everywhere else (this CPU container,
+tests) the pure-jnp oracles from ``ref.py`` are used, except when
+``REPRO_FORCE_PALLAS=1`` forces the kernels through interpret mode (slow but
+exercises the kernel bodies end-to-end).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import ref
+from .dirichlet_expectation import dirichlet_expectation as _de_pallas
+from .vmp_zstep import zstep as _zstep_pallas
+
+
+def _backend() -> str:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return "pallas_interpret"
+    try:
+        if jax.default_backend() == "tpu":
+            return "pallas"
+    except Exception:  # pragma: no cover - device init failure
+        pass
+    return "ref"
+
+
+def dirichlet_expectation(alpha: jax.Array) -> jax.Array:
+    b = _backend()
+    if b == "ref" or alpha.ndim != 2:
+        return ref.dirichlet_expectation(alpha)
+    return _de_pallas(alpha, interpret=(b == "pallas_interpret"))
+
+
+def zstep(logits: jax.Array):
+    b = _backend()
+    if b == "ref" or logits.ndim != 2:
+        return ref.zstep(logits)
+    return _zstep_pallas(logits, interpret=(b == "pallas_interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    from .flash_attention import flash_attention as _fa_pallas
+    b = _backend()
+    if b == "ref":
+        return ref.flash_attention(q, k, v, causal=causal)
+    return _fa_pallas(q, k, v, causal=causal,
+                      interpret=(b == "pallas_interpret"))

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics; the kernels must match them (tests sweep shapes and
+dtypes and assert allclose in interpret mode).  They are also the production
+fallback on non-TPU backends.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import digamma
+
+
+def dirichlet_expectation(alpha: jax.Array) -> jax.Array:
+    """E[log theta] rowwise: digamma(a) - digamma(a.sum(-1))."""
+    return digamma(alpha) - digamma(alpha.sum(axis=-1, keepdims=True))
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True) -> jax.Array:
+    """Oracle for the flash kernel: dense masked attention.
+    q/k/v: (BH, S, Dh)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(dh))
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)) \
+        .astype(q.dtype)
+
+
+def zstep(logits: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused responsibility update: (softmax(logits), logsumexp(logits)).
+
+    The logsumexp is the per-instance ELBO contribution of a latent at its
+    coordinate optimum (see core/vmp.py).
+    """
+    m = logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    s = e.sum(axis=-1, keepdims=True)
+    return e / s, (m + jnp.log(s))[..., 0]

@@ -1,0 +1,116 @@
+"""Per-shape collective histogram from a compiled cell — the profiling tool
+for the hillclimb loop (no real hardware: the lowered IR is the profile).
+
+  PYTHONPATH=src python -m repro.launch.collective_histo --arch gemma3-4b \
+      --shape train_4k [--multi] [--remat dots] [--fsdp] [--top 15]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+
+from . import hlo_cost
+
+
+def histogram(hlo: str, dynamic_trip_hint: float = 1.0):
+    """Trip-count-aware (kind, shape) -> (count, bytes) histogram."""
+    comps = hlo_cost.parse_computations(hlo)
+    out = collections.Counter()
+    bytes_out = collections.Counter()
+
+    memo = {}
+
+    def walk(name, mult):
+        c = comps.get(name)
+        if c is None:
+            return
+        for op in c.ops:
+            kind = None
+            for k in hlo_cost.COLLECTIVES:
+                if op.kind == k or op.kind.startswith(k + "-"):
+                    kind = k
+            if kind:
+                shape = op.type_str.strip()
+                key = (kind, shape)
+                out[key] += mult
+                bytes_out[key] += mult * hlo_cost._shape_bytes(shape)
+            elif op.kind == "while":
+                body, cond, trip = hlo_cost._while_info(op)
+                t = trip if trip is not None else dynamic_trip_hint
+                if body:
+                    walk(body, mult * t)
+                if cond:
+                    walk(cond, mult * t)
+            elif op.kind in ("call", "conditional"):
+                for target in re.findall(r"(?:to_apply|calls)=%?([\w.\-]+)",
+                                         op.rest):
+                    walk(target, mult)
+
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    walk(m.group(1) if m else next(iter(comps)), 1.0)
+    return out, bytes_out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--moe-groups", type=int, default=0)
+    ap.add_argument("--act-shard", default="none")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, RunConfig
+    from repro.launch.dryrun import run_cell
+
+    kind, seq, batch = SHAPES[args.shape]
+    run = RunConfig(seq_len=seq, global_batch=batch, remat=args.remat,
+                    fsdp=args.fsdp, moe_groups=args.moe_groups,
+                    act_shard=args.act_shard)
+    # run_cell keeps the HLO internally; easier to re-lower here:
+    import jax
+    import numpy as np
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (build_decode_step, build_prefill_step,
+                                    build_train_step, jit_decode_step,
+                                    jit_prefill_step, jit_train_step)
+    from repro.models import input_specs, make_model
+    from repro.configs import get_arch
+
+    cfg = get_arch(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi)
+    specs = input_specs(cfg, args.shape, run)
+    if kind == "train":
+        built = build_train_step(cfg, run, mesh)
+        pa, oa = built["abstract_state"]
+        step = jit_train_step(built, mesh, specs["batch"])
+        lowered = step.lower(pa, oa, specs["batch"],
+                             jax.ShapeDtypeStruct((), np.int32))
+    elif kind == "prefill":
+        built = build_prefill_step(cfg, run, mesh)
+        step = jit_prefill_step(built, mesh, specs["batch"],
+                                jax.eval_shape(lambda: make_model(cfg)[
+                                    "init_cache"](run, batch, seq)))
+        lowered = step.lower(built["abstract_params"], specs["batch"])
+    else:
+        built = build_decode_step(cfg, run, mesh)
+        step = jit_decode_step(built, mesh, specs["cache"])
+        lowered = step.lower(built["abstract_params"], specs["cache"],
+                             specs["tokens"], specs["pos"])
+    hlo = lowered.compile().as_text()
+    counts, byts = histogram(hlo, max(1.0, seq / (2.0 * run.attn_chunk)))
+    rows = sorted(byts.items(), key=lambda kv: -kv[1])[:args.top]
+    total = sum(byts.values())
+    print(f"total collective bytes/device: {total/1e9:.2f} GB")
+    for (kind_, shape), b in rows:
+        print(f"  {b/1e9:9.3f} GB  x{counts[(kind_, shape)]:<8.0f} "
+              f"{kind_:20s} {shape[:110]}")
+
+
+if __name__ == "__main__":
+    main()

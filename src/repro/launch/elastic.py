@@ -1,0 +1,49 @@
+"""Elastic scaling: re-plan the mesh + shardings for a changed device count
+and resume from the newest checkpoint.
+
+On a real cluster the controller detects lost/added slices and relaunches the
+job with a different device set; everything the job needs to continue is
+(a) a mesh factorization for the new count, (b) re-derived shardings (the
+Rules are mesh-parametric), and (c) the latest complete checkpoint (host
+arrays, so they reshard on device_put).  Tests simulate this with fake CPU
+devices: train on 8, "lose" half, resume on 4 — loss continues descending.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.configs import RunConfig
+
+
+def factor_mesh(n_devices: int, want_model: int = 0):
+    """Choose a (data, model) factorization for an arbitrary device count.
+    Greedy: model axis gets the largest power-of-2 divisor <= want_model."""
+    model = 1
+    if want_model > 1:
+        m = min(want_model, n_devices)
+        while m > 1:
+            if n_devices % m == 0:
+                model = m
+                break
+            m //= 2
+    data = n_devices // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def remesh_and_resume(cfg, run: RunConfig, checkpoint_dir: str,
+                      n_devices: int | None = None, want_model: int = 0,
+                      steps: int = 10):
+    """Rebuild on a new mesh and continue training from the checkpoint."""
+    from .train import train
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if run.global_batch % n and run.global_batch % (n // max(want_model, 1)):
+        raise ValueError(f"global batch {run.global_batch} not divisible "
+                         f"for {n} devices")
+    mesh = factor_mesh(n, want_model)
+    return train(cfg, run, steps, mesh=mesh, checkpoint_dir=checkpoint_dir,
+                 checkpoint_every=max(steps // 2, 1))

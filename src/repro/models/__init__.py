@@ -1,0 +1,2 @@
+from . import layers, transformer  # noqa: F401
+from .registry import input_specs, make_model  # noqa: F401

@@ -1,0 +1,635 @@
+"""Neural building blocks for the assigned architecture families.
+
+Pure-JAX, functional: ``init_*`` builds fp32 param pytrees, ``*_train``
+applies over a full sequence, ``*_decode`` applies one token against a cache.
+Compute runs in the run dtype (bf16 by default) with fp32 norms/softmax.
+
+Blocks: RMS/LayerNorm (incl. olmo's non-parametric), RoPE, GQA attention
+(full + sliding-window, flash-style chunking for long sequences, ring-buffer
+caches for local layers), SwiGLU/GEGLU/GELU MLPs, token-choice top-k MoE
+(sort-based dropless dispatch with static capacity), RG-LRU recurrent blocks
+(associative scan), and the Mamba2 SSD mixer (chunked state-space dual form).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, RunConfig
+
+
+def _dtype(run: RunConfig):
+    return jnp.dtype(run.dtype)
+
+
+def _init(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig):
+    if cfg.norm == "nonparametric":
+        return {}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+                "bias": jnp.zeros((cfg.d_model,), jnp.float32)}
+    return {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}   # rmsnorm (1+s)
+
+
+def apply_norm(p, x, cfg: ArchConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        out = out * p["scale"] + p["bias"]
+    else:
+        out = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + 1e-6)
+        if cfg.norm != "nonparametric":
+            out = out * (1.0 + p["scale"])
+    return out.astype(x.dtype)
+
+
+def _rms_head(x, scale):
+    """qk-norm: rmsnorm over the head dim."""
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + 1e-6)
+    return (out * (1.0 + scale)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: (..., S) int."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq        # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, full/sliding-window, flash-chunked, caches)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    p = {"wq": _init(ks[0], (d, h * dh)),
+         "wk": _init(ks[1], (d, kv * dh)),
+         "wv": _init(ks[2], (d, kv * dh)),
+         "wo": _init(ks[3], (h * dh, d), scale=1.0 / math.sqrt(h * dh))}
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.zeros((dh,), jnp.float32)
+        p["k_scale"] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def _qkv(p, xq, xkv, cfg: ArchConfig, run: RunConfig):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = _dtype(run)
+    q = (xq @ p["wq"].astype(dt)).reshape(*xq.shape[:-1], h, dh)
+    k = (xkv @ p["wk"].astype(dt)).reshape(*xkv.shape[:-1], kv, dh)
+    v = (xkv @ p["wv"].astype(dt)).reshape(*xkv.shape[:-1], kv, dh)
+    if cfg.qk_norm:
+        q = _rms_head(q, p["q_scale"])
+        k = _rms_head(k, p["k_scale"])
+    return q, k, v
+
+
+def _sdpa_dense(q, k, v, *, causal, window, q_pos0=0, kv_pos0=0):
+    """Dense masked attention.  q: (B,Sq,H,Dh), k/v: (B,Sk,KV,Dh)."""
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, sq, kvh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) / math.sqrt(dh)
+    qi = q_pos0 + jnp.arange(sq)[:, None]
+    ki = kv_pos0 + jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= (ki <= qi) & (ki >= 0)     # ki<0 = padding before t=0
+    if window:
+        mask &= ki > qi - window
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _sdpa_flash(q, k, v, *, causal, chunk, dynamic_skip=False,
+                f32_scores=True):
+    """Flash-style double-chunked attention for long full-attention layers.
+
+    Outer scan over query chunks; inner loop over kv chunks.  With
+    ``dynamic_skip`` the inner ``fori_loop`` has a *dynamic* upper bound so
+    the compiled FLOPs are the triangular ~S^2/2, not S^2 — legal only on
+    forward-only paths (prefill): reverse-mode AD cannot differentiate a
+    dynamic-bound loop, so the train path uses the masked full scan.
+    """
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    cq = min(chunk, s)
+    nq = s // cq
+    ck = min(chunk, s)
+    nk = s // ck
+    qc = q.reshape(b, nq, cq, kvh, g, dh)
+    kc = k.reshape(b, nk, ck, kvh, dh)
+    vc = v.reshape(b, nk, ck, kvh, dh)
+    scale = 1.0 / math.sqrt(dh)
+
+    def q_block(qi, qb):
+        # qb: (b, cq, kvh, g, dh)
+        m0 = jnp.full((b, kvh, g, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, cq, dh), jnp.float32)
+
+        def kv_block(ki, carry):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(kc, ki, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vc, ki, 1, keepdims=False)
+            # score blocks are the dominant HBM traffic of long-context
+            # attention under XLA (no VMEM-resident fusion without a custom
+            # kernel): bf16 blocks halve it; max/sum stay f32.
+            sdt = jnp.float32 if f32_scores else q.dtype
+            sc = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(sdt) * \
+                jnp.asarray(scale, sdt)
+            if causal:
+                qpos = qi * cq + jnp.arange(cq)[:, None]
+                kpos = ki * ck + jnp.arange(ck)[None, :]
+                sc = jnp.where(kpos <= qpos, sc, jnp.asarray(-1e30, sdt))
+            m_new = jnp.maximum(m, sc.max(-1).astype(jnp.float32))
+            p = jnp.exp(sc - m_new[..., None].astype(sdt))
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1, dtype=jnp.float32)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return m_new, l_new, acc_new
+
+        if dynamic_skip and causal:
+            hi = (qi + 1) * cq
+            n_blocks = jnp.minimum((hi + ck - 1) // ck, nk)
+            m, l, acc = jax.lax.fori_loop(0, n_blocks, kv_block, (m0, l0, a0))
+        else:
+            def scan_body(carry, ki):
+                return kv_block(ki, carry), None
+            (m, l, acc), _ = jax.lax.scan(scan_body, (m0, l0, a0),
+                                          jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return qi + 1, out.transpose(0, 3, 1, 2, 4)     # (b, cq, kvh, g, dh)
+
+    _, outs = jax.lax.scan(q_block, 0, qc.transpose(1, 0, 2, 3, 4, 5))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
+def _sdpa_window(q, k, v, *, window, chunk):
+    """Sliding-window attention over a long sequence: each query chunk sees a
+    statically sized kv slice [chunk_start - window, chunk_end) — O(S*W)."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    cq = min(chunk, s)
+    nq = s // cq
+    span = window + cq
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    qc = q.reshape(b, nq, cq, h, dh)
+
+    def q_block(qi, qb):
+        start = qi * cq                         # slice of padded kv
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, span, 1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, span, 1)
+        # global positions: query t -> start+t; kv slice j -> start+j-window
+        # (negative = left padding, masked by the ki>=0 term in _sdpa_dense)
+        out = _sdpa_dense(qb, kb, vb, causal=True, window=window,
+                          q_pos0=start, kv_pos0=start - window)
+        return qi + 1, out
+
+    _, outs = jax.lax.scan(q_block, 0, qc.transpose(1, 0, 2, 3, 4))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+def _flash_kernel_gqa(q, k, v):
+    """Route GQA attention through the Pallas flash kernel: broadcast kv
+    heads to query heads and flatten (B, H) into the kernel's batch dim."""
+    from repro.kernels import ops as kops
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    kb = jnp.repeat(k, g, axis=2)
+    vb = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kf = kb.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    vf = vb.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    out = kops.flash_attention(qf, kf, vf, causal=True)
+    return out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+
+
+def attention_train(p, x, cfg: ArchConfig, run: RunConfig, *, kind: str,
+                    positions, causal: bool = True, enc=None):
+    """Full-sequence attention.  kind: "global" | "local"; ``enc`` switches to
+    cross-attention (q from x, kv from enc, no mask)."""
+    xkv = enc if enc is not None else x
+    q, k, v = _qkv(p, x, xkv, cfg, run)
+    if enc is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    s = x.shape[1]
+    window = cfg.window if kind == "local" else 0
+    chunked = s > 2 * run.attn_chunk and s % run.attn_chunk == 0
+    if enc is not None:
+        out = _sdpa_dense(q, k, v, causal=False, window=0)
+    elif run.flash_kernel and causal and not window:
+        out = _flash_kernel_gqa(q, k, v)
+    elif window and chunked:
+        out = _sdpa_window(q, k, v, window=window, chunk=run.attn_chunk)
+    elif chunked and causal:
+        out = _sdpa_flash(q, k, v, causal=True, chunk=run.attn_chunk,
+                          f32_scores=run.attn_f32_scores)
+    else:
+        out = _sdpa_dense(q, k, v, causal=causal, window=window)
+    b, s_, h, dh = out.shape
+    return out.reshape(b, s_, h * dh) @ p["wo"].astype(_dtype(run))
+
+
+def init_attn_cache(cfg: ArchConfig, run: RunConfig, batch: int, max_len: int,
+                    kind: str):
+    """Cache spec: global layers hold the full sequence; local layers hold a
+    ring buffer of ``window`` slots."""
+    dh, kv = cfg.head_dim_, cfg.n_kv_heads
+    length = min(max_len, cfg.window) if kind == "local" else max_len
+    shape = (batch, length, kv, dh)
+    dt = _dtype(run)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def attention_decode(p, x, cache, pos, cfg: ArchConfig, run: RunConfig, *,
+                     kind: str, enc_cache=None):
+    """One-token attention against the cache.  ``pos`` scalar int32."""
+    q, k, v = _qkv(p, x, x, cfg, run)
+    q = rope(q, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+    k = rope(k, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+    length = cache["k"].shape[1]
+    slot = pos % length if kind == "local" else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+
+    b, _, h, dh = q.shape
+    kvh = ck.shape[2]
+    g = h // kvh
+    qh = q.reshape(b, kvh, g, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qh, ck) / math.sqrt(dh)
+    idx = jnp.arange(length)
+    if kind == "local":
+        # ring slot s holds time t = pos - ((pos - s) mod length)
+        t = pos - ((pos - idx) % length)
+        valid = (t >= 0) & (t <= pos)
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, :],
+                       scores.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, cv).reshape(b, 1, h * dh)
+    y = out @ p["wo"].astype(_dtype(run))
+    return y, {"k": ck, "v": cv}
+
+
+def cross_attention_decode(p, x, enc_cache, cfg: ArchConfig, run: RunConfig):
+    """One-token cross-attention against precomputed encoder K/V."""
+    dt = _dtype(run)
+    h, dh, kvh = cfg.n_heads, cfg.head_dim_, cfg.n_kv_heads
+    b = x.shape[0]
+    q = (x @ p["wq"].astype(dt)).reshape(b, kvh, h // kvh, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", q, enc_cache["k"]) / math.sqrt(dh)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(dt)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, enc_cache["v"]).reshape(b, 1, h * dh)
+    return out @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {"wi": _init(ks[0], (d, 2 * f if gated else f)),
+         "wo": _init(ks[1], (f, d))}
+    return p
+
+
+def _act(h, cfg: ArchConfig):
+    if cfg.act == "swiglu":
+        a, b = jnp.split(h, 2, axis=-1)
+        return jax.nn.silu(a) * b
+    if cfg.act == "geglu":
+        a, b = jnp.split(h, 2, axis=-1)
+        return jax.nn.gelu(a) * b
+    return jax.nn.gelu(h)
+
+
+def mlp(p, x, cfg: ArchConfig, run: RunConfig):
+    dt = _dtype(run)
+    h = _act(x @ p["wi"].astype(dt), cfg)
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, sort-based dropless dispatch, static capacity)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ArchConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 3)
+    gated = cfg.act in ("swiglu", "geglu")
+    return {"router": _init(ks[0], (d, e)),
+            "wi": _init(ks[1], (e, d, 2 * f if gated else f)),
+            "wo": _init(ks[2], (e, f, d))}
+
+
+def _moe_route(xt, router, k, e, cap, dt):
+    """Routing for one group: xt (n, d) -> slot->token map and weights.
+
+    Only index/weight arrays are produced here (d-free, a few MB), so it is
+    cheap no matter how the partitioner handles the sort."""
+    n = xt.shape[0]
+    logits = (xt @ router.astype(dt)).astype(jnp.float32)        # (n, e)
+    top_w, top_ids = jax.lax.top_k(logits, k)                    # (n, k)
+    top_w = jax.nn.softmax(top_w, axis=-1)
+
+    flat_e = top_ids.reshape(-1)                                 # (n*k,)
+    flat_t = jnp.repeat(jnp.arange(n), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(se, length=e)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(n * k) - offsets[se]                        # pos in expert
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)              # overflow slot
+    take = jnp.full((e * cap + 1,), n, jnp.int32).at[slot].set(
+        st.astype(jnp.int32))
+    w_slot = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(sw * keep)
+    return take[:e * cap].reshape(e, cap), \
+        w_slot[:e * cap].reshape(e, cap)
+
+
+def moe_mlp(p, x, cfg: ArchConfig, run: RunConfig):
+    """x: (B, S, d) -> (B, S, d).  Top-k routing with softmax over the
+    selected experts (qwen3-style), gather-based dropless dispatch.
+
+    ``run.moe_groups > 1`` enables GROUP-LOCAL routing (the InferSpark
+    doctrine applied to experts — keep the big token plate shard-local,
+    reduce only small state):
+
+      - tokens split into groups aligned with the data shards; each group
+        routes independently (per-group capacity), so there is no global
+        sort and no cross-shard dispatch of the d-wide payload;
+      - only int32/float32 index maps are scattered (d-free, ~MBs);
+      - the (G, E, C) index map is sharded (data, model): every model shard
+        gathers/computes/scatters ONLY its own experts' slots, making the
+        expert einsums truly expert-parallel (the combine is a local
+        scatter-add + one all-reduce over the model axis).
+    """
+    from .sharding_ctx import constrain
+    dt = _dtype(run)
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.experts_per_tok
+    g = run.moe_groups if run.moe_groups and n % run.moe_groups == 0 else 1
+    ng = n // g
+    cap = max(1, int(math.ceil(ng * k / e * run.moe_capacity)))
+
+    xt = constrain(x.reshape(g, ng, d), ("dp", None, None))
+    take, w_slot = jax.vmap(
+        lambda xg: _moe_route(xg, p["router"], k, e, cap, dt))(xt)
+    # moe_ep_local pins the dispatch expert-sharded: every model shard
+    # gathers/computes only its experts' slots (16x less einsum compute) at
+    # the cost of a model-axis all-reduce in the combine — measured
+    # compute-optimal but collective-worse than leaving placement to the
+    # partitioner (EXPERIMENTS.md Perf-1, iters 3-4), so it is opt-in.
+    if run.moe_ep_local:
+        take = constrain(take, ("dp", "tp", None))      # (G, E, C)
+        w_slot = constrain(w_slot, ("dp", "tp", None))
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((g, 1, d), dt)], axis=1)
+    gidx = jnp.arange(g)[:, None, None]
+    hb = xt_pad[gidx, take]                             # (G, E, C, d)
+    if run.moe_ep_local:
+        hb = constrain(hb, ("dp", "tp", None, None))
+    h = _act(jnp.einsum("gecd,edf->gecf", hb, p["wi"].astype(dt)), cfg)
+    yb = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+    if run.moe_ep_local:
+        yb = constrain(yb, ("dp", "tp", None, None))
+
+    contrib = yb * w_slot[..., None].astype(dt)
+    out = jnp.zeros((g, ng + 1, d), dt).at[gidx, take].add(contrib)
+    out = constrain(out[:, :ng], ("dp", None, None))
+    return out.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (recurrentgemma / Griffin)
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, cfg: ArchConfig):
+    d, L = cfg.d_model, cfg.d_inner
+    ks = jax.random.split(key, 6)
+    return {"wx": _init(ks[0], (d, L)),
+            "wgate": _init(ks[1], (d, L)),
+            "conv": _init(ks[2], (cfg.ssm_conv, L), scale=0.5),
+            "wr": _init(ks[3], (L, L)),
+            "wi": _init(ks[4], (L, L)),
+            "lam": jnp.full((L,), 0.5, jnp.float32),
+            "wo": _init(ks[5], (L, d))}
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv over time.  x: (B,S,L), w: (W,L).
+    With ``state`` (B,W-1,L): single-step decode, returns (y, new_state)."""
+    wdt = w.astype(x.dtype)
+    if state is not None:
+        xin = jnp.concatenate([state, x], axis=1)            # (B, W, L)
+        y = (xin * wdt[None]).sum(axis=1, keepdims=True)
+        return y, xin[:, 1:]
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * wdt[i] for i in range(width))
+    return y, None
+
+
+def _rglru_core(xb, r, i, lam):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t), diagonal a via gates."""
+    log_a = -8.0 * jax.nn.softplus(lam) * r                  # (B,S,L), fp32
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xb)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh
+
+
+def rglru_train(p, x, cfg: ArchConfig, run: RunConfig):
+    dt = _dtype(run)
+    xb = x @ p["wx"].astype(dt)
+    xb, _ = _causal_conv(xb, p["conv"])
+    gate = jax.nn.gelu(x @ p["wgate"].astype(dt))
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wr"])
+    i = jax.nn.sigmoid(xf @ p["wi"])
+    h = _rglru_core(xf, r, i, p["lam"])
+    return ((gate.astype(jnp.float32) * h).astype(dt)) @ p["wo"].astype(dt)
+
+
+def init_rglru_cache(cfg: ArchConfig, run: RunConfig, batch: int):
+    L = cfg.d_inner
+    return {"h": jnp.zeros((batch, L), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, L), _dtype(run))}
+
+
+def rglru_decode(p, x, cache, cfg: ArchConfig, run: RunConfig):
+    dt = _dtype(run)
+    xb = x @ p["wx"].astype(dt)                              # (B,1,L)
+    xb, conv_state = _causal_conv(xb, p["conv"], cache["conv"])
+    gate = jax.nn.gelu(x @ p["wgate"].astype(dt))
+    xf = xb[:, 0].astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wr"])
+    i = jax.nn.sigmoid(xf @ p["wi"])
+    log_a = -8.0 * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    h = a * cache["h"] + b
+    y = (gate[:, 0].astype(jnp.float32) * h).astype(dt) @ p["wo"].astype(dt)
+    return y[:, None], {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD block (chunked state-space dual form)
+# ---------------------------------------------------------------------------
+
+def init_ssd(key, cfg: ArchConfig):
+    d, din, nst, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 3)
+    return {"in_proj": _init(ks[0], (d, 2 * din + 2 * nst + nh)),
+            "conv": _init(ks[1], (cfg.ssm_conv, din + 2 * nst), scale=0.5),
+            "a_log": jnp.zeros((nh,), jnp.float32),
+            "d_skip": jnp.ones((nh,), jnp.float32),
+            "dt_bias": jnp.zeros((nh,), jnp.float32),
+            "out_proj": _init(ks[2], (din, d))}
+
+
+def _ssd_split(p, x, cfg, run):
+    dt_ = _dtype(run)
+    din, nst, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * nst]
+    dt = zxbcdt[..., din + din + 2 * nst:]
+    return z, xbc, dt
+
+
+def ssd_train(p, x, cfg: ArchConfig, run: RunConfig, chunk: int = 128):
+    """Chunked SSD: intra-chunk quadratic form + inter-chunk state scan."""
+    dt_ = _dtype(run)
+    b, s, _ = x.shape
+    din, nst, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dtr = _ssd_split(p, x, cfg, run)
+    xbc, _ = _causal_conv(xbc, p["conv"])
+    xs = xbc[..., :din]
+    bmat = xbc[..., din:din + nst].astype(jnp.float32)           # (B,S,N)
+    cmat = xbc[..., din + nst:].astype(jnp.float32)              # (B,S,N)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"]) # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                     # (H,)
+    da = dt * a                                                  # (B,S,H)
+    xh = xs.reshape(b, s, nh, hp).astype(jnp.float32)
+    xdt = xh * dt[..., None]                                     # (B,S,H,P)
+
+    q = min(chunk, s)
+    nc = s // q
+    da_c = da.reshape(b, nc, q, nh)
+    cum = jnp.cumsum(da_c, axis=2)                               # (B,nc,q,H)
+    tot = cum[:, :, -1]                                          # (B,nc,H)
+    xdt_c = xdt.reshape(b, nc, q, nh, hp)
+    b_c = bmat.reshape(b, nc, q, nst)
+    c_c = cmat.reshape(b, nc, q, nst)
+
+    # intra-chunk: Y[i] = sum_{j<=i} C_i.B_j exp(cum_i - cum_j) x_j dt_j
+    att = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)                # (B,nc,q,q)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,q,q,H)
+    ii, jj = jnp.arange(q)[:, None], jnp.arange(q)[None, :]
+    l = jnp.where((jj <= ii)[None, None, :, :, None],
+                  jnp.exp(decay), 0.0)                           # (B,nc,q,q,H)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", att, l, xdt_c)
+
+    # chunk states: S_c = sum_j exp(tot - cum_j) B_j (x_j dt_j)^T
+    sdecay = jnp.exp(tot[:, :, None, :] - cum)                   # (B,nc,q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", b_c, sdecay, xdt_c)
+
+    # inter-chunk scan: H_c = exp(tot_c) H_{c-1} + S_c
+    def scan_fn(h, inp):
+        st, t = inp
+        h_new = h * jnp.exp(t)[..., None, None] + st
+        return h_new, h
+    h0 = jnp.zeros((b, nh, nst, hp), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), tot.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", c_c, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(b, s, nh, hp)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, s, din)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    return y @ p["out_proj"].astype(dt_)
+
+
+def init_ssd_cache(cfg: ArchConfig, run: RunConfig, batch: int):
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), _dtype(run)),
+            "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                            cfg.ssm_head_dim), jnp.float32)}
+
+
+def ssd_decode(p, x, cache, cfg: ArchConfig, run: RunConfig):
+    dt_ = _dtype(run)
+    b = x.shape[0]
+    din, nst, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dtr = _ssd_split(p, x, cfg, run)
+    xbc, conv_state = _causal_conv(xbc, p["conv"], cache["conv"])
+    xs = xbc[:, 0, :din]
+    bvec = xbc[:, 0, din:din + nst].astype(jnp.float32)
+    cvec = xbc[:, 0, din + nst:].astype(jnp.float32)
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)                                         # (B,H)
+    xh = xs.reshape(b, nh, hp).astype(jnp.float32) * dt[..., None]
+    h = cache["h"] * da[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", bvec, xh)
+    y = jnp.einsum("bn,bhnp->bhp", cvec, h)
+    y = y + p["d_skip"][None, :, None] * xs.reshape(b, nh, hp).astype(jnp.float32)
+    y = y.reshape(b, din) * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    y = y.astype(dt_) @ p["out_proj"].astype(dt_)
+    return y[:, None], {"conv": conv_state, "h": h}

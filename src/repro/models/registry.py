@@ -1,0 +1,71 @@
+"""Arch registry: resolve an ArchConfig to model functions + input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of a
+given (arch x shape) cell — weak-type-correct, shardable, no allocation —
+which is what the multi-pod dry-run lowers against.  Modality frontends are
+stubs per the assignment: audio/vision cells receive precomputed frame/patch
+embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ArchConfig, RunConfig
+from . import transformer as T
+
+
+def make_model(cfg: ArchConfig):
+    """The functional model bundle for an architecture."""
+    return {
+        "init": lambda run, key=None: T.init_params(cfg, run, key),
+        "train_loss": lambda p, b, run: T.train_loss(p, b, cfg, run),
+        "prefill": lambda p, b, run, cache_len=0: T.prefill(
+            p, b, cfg, run, cache_len),
+        "init_cache": lambda run, batch, max_len: T.init_cache(
+            cfg, run, batch, max_len),
+        "decode_step": lambda p, c, t, pos, run: T.decode_step(
+            p, c, t, pos, cfg, run),
+    }
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, run: RunConfig) -> dict:
+    """ShapeDtypeStructs for one (arch x shape) cell.
+
+    train  -> the training batch (tokens/labels [+ frames|patches])
+    prefill-> the prompt batch
+    decode -> (cache, tokens, pos): one new token against a seq_len cache
+    """
+    kind, seq, batch = SHAPES[shape_name]
+    i32, f32 = jnp.int32, jnp.float32
+
+    if kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            b = {"frames": _sds((batch, seq, cfg.d_model), f32),
+                 "tokens": _sds((batch, seq), i32)}
+            if kind == "train":
+                b["labels"] = _sds((batch, seq), i32)
+            return {"batch": b}
+        if cfg.frontend == "vision":
+            n_text = seq - cfg.n_patches
+            b = {"patches": _sds((batch, cfg.n_patches, cfg.d_model), f32),
+                 "tokens": _sds((batch, n_text), i32)}
+            if kind == "train":
+                b["labels"] = _sds((batch, n_text), i32)
+            return {"batch": b}
+        b = {"tokens": _sds((batch, seq), i32)}
+        if kind == "train":
+            b["labels"] = _sds((batch, seq), i32)
+        return {"batch": b}
+
+    # decode: cache of seq_len + one token
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, run, batch, seq))
+    return {"cache": cache,
+            "tokens": _sds((batch, 1), i32),
+            "pos": _sds((), i32)}

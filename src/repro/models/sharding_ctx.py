@@ -1,0 +1,54 @@
+"""Trace-time sharding context for activation constraints.
+
+Model code is mesh-agnostic; the step builders install the active mesh +
+logical axes here, and layers call :func:`constrain` with logical templates
+("dp"/"tp"/None per dim).  Outside any context it is a no-op, so models work
+unchanged on a single device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX = {"mesh": None, "dp": (), "tp": None}
+
+
+@contextlib.contextmanager
+def mesh_ctx(mesh, dp, tp):
+    prev = dict(_CTX)
+    _CTX.update(mesh=mesh, dp=dp, tp=tp)
+    try:
+        yield
+    finally:
+        _CTX.update(prev)
+
+
+def set_ctx(mesh, dp, tp):
+    _CTX.update(mesh=mesh, dp=dp, tp=tp)
+
+
+def clear_ctx():
+    _CTX.update(mesh=None, dp=(), tp=None)
+
+
+def constrain(x, template):
+    """template: tuple over dims of "dp" | "tp" | None.  Dims that do not
+    divide the axis size fall back to None."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    spec = []
+    for dim, t in zip(x.shape, template):
+        axes = _CTX["dp"] if t == "dp" else _CTX["tp"] if t == "tp" else None
+        if axes:
+            import numpy as np
+            size = int(np.prod([mesh.shape[a] for a in
+                                (axes if isinstance(axes, tuple) else (axes,))]))
+            spec.append(axes if dim % size == 0 else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,543 @@
+"""Model assembly: decoder-only LMs (dense/MoE/hybrid/SSM/VLM) and the
+whisper-style encoder-decoder, built from ``layers.py`` blocks.
+
+Layer stacking uses ``lax.scan`` over repeats of the architecture's block
+*cycle* (e.g. gemma3's LLLLLG) so the HLO stays O(cycle) rather than
+O(n_layers); the non-multiple tail is applied unrolled.  Caches mirror the
+same scan/tail structure.
+
+Entry points (all pure functions of (params, batch/cache)):
+  init_params   — fp32 parameter pytree (works under jax.eval_shape)
+  train_loss    — full-sequence forward + masked CE
+  prefill       — full-sequence forward that also builds the decode cache
+  init_cache    — zeroed cache pytree for a given (batch, max_len)
+  decode_step   — one-token step against the cache
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+def _cycle_info(cfg: ArchConfig):
+    cycle = cfg.pattern
+    c = len(cycle)
+    repeats = cfg.n_layers // c
+    tail = cfg.layer_kinds()[repeats * c:]
+    return cycle, repeats, tail
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, kind: str, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": L.init_norm(cfg)}
+    if kind in ("global", "local"):
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["norm2"] = L.init_norm(cfg)
+        p["ffn"] = (L.init_moe(ks[1], cfg) if cfg.n_experts
+                    else L.init_mlp(ks[1], cfg))
+        if cross:
+            p["cross_norm"] = L.init_norm(cfg)
+            p["cross"] = L.init_attention(ks[2], cfg, cross=True)
+    elif kind == "rglru":
+        p["rglru"] = L.init_rglru(ks[0], cfg)
+        p["norm2"] = L.init_norm(cfg)
+        p["ffn"] = L.init_mlp(ks[1], cfg)
+    elif kind == "ssd":
+        p["ssd"] = L.init_ssd(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_stack(key, cfg: ArchConfig, n_layers: int, kinds, cross=False):
+    cycle, repeats, tail = _cycle_info(cfg) if kinds is None else (None,) * 3
+    if kinds is not None:        # encoder: homogeneous "global"
+        cycle, repeats, tail = ("global",), n_layers, ()
+    keys = jax.random.split(key, n_layers + 1)
+    c = len(cycle)
+    scan_params = None
+    if repeats:
+        per_pos = []
+        for pos in range(c):
+            reps = [_init_block(keys[r * c + pos], cfg, cycle[pos], cross)
+                    for r in range(repeats)]
+            per_pos.append(_stack(reps))
+        scan_params = per_pos
+    tail_params = [_init_block(keys[repeats * c + i], cfg, kind, cross)
+                   for i, kind in enumerate(tail)]
+    return {"scan": scan_params, "tail": tail_params}
+
+
+def init_params(cfg: ArchConfig, run: RunConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(run.seed)
+    ks = jax.random.split(key, 6)
+    d, vp = cfg.d_model, cfg.vocab_padded
+    params = {
+        "embed": L._init(ks[0], (vp, d), scale=0.02),
+        "final_norm": L.init_norm(cfg),
+        "blocks": _init_stack(ks[1], cfg, cfg.n_layers, None,
+                              cross=cfg.family == "encdec"),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._init(ks[2], (d, vp))
+    if cfg.family == "encdec":
+        params["encoder"] = _init_stack(ks[3], cfg, cfg.n_enc_layers,
+                                        kinds="enc")
+        params["enc_norm"] = L.init_norm(cfg)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = L._init(ks[4], (d, d))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _block_train(p, x, kind, cfg, run, positions, enc=None, causal=True,
+                 return_cache=False, cache_len=0):
+    cache = {}
+    if kind in ("global", "local"):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        if return_cache:
+            attn_out, kv = _attn_with_cache(p["attn"], h, cfg, run, kind,
+                                            positions, causal, cache_len)
+            cache.update(kv)
+        else:
+            attn_out = L.attention_train(p["attn"], h, cfg, run, kind=kind,
+                                         positions=positions, causal=causal)
+        x = x + attn_out
+        if "cross" in p:
+            hc = L.apply_norm(p["cross_norm"], x, cfg)
+            x = x + L.attention_train(p["cross"], hc, cfg, run, kind="global",
+                                      positions=positions, enc=enc)
+        h2 = L.apply_norm(p["norm2"], x, cfg)
+        ffn = (L.moe_mlp(p["ffn"], h2, cfg, run) if cfg.n_experts
+               else L.mlp(p["ffn"], h2, cfg, run))
+        x = x + ffn
+    elif kind == "rglru":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        if return_cache:
+            out, rc = _rglru_with_cache(p["rglru"], h, cfg, run)
+            cache.update(rc)
+        else:
+            out = L.rglru_train(p["rglru"], h, cfg, run)
+        x = x + out
+        h2 = L.apply_norm(p["norm2"], x, cfg)
+        x = x + L.mlp(p["ffn"], h2, cfg, run)
+    elif kind == "ssd":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        if return_cache:
+            out, sc = _ssd_with_cache(p["ssd"], h, cfg, run)
+            cache.update(sc)
+        else:
+            out = L.ssd_train(p["ssd"], h, cfg, run)
+        x = x + out
+    return (x, cache) if return_cache else x
+
+
+def _attn_with_cache(p, h, cfg, run, kind, positions, causal, cache_len):
+    """Prefill: run attention AND produce the decode cache."""
+    q, k, v = L._qkv(p, h, h, cfg, run)
+    q = L.rope(q, positions, cfg.rope_theta)
+    kr = L.rope(k, positions, cfg.rope_theta)
+    s = h.shape[1]
+    window = cfg.window if kind == "local" else 0
+    chunked = s > 2 * run.attn_chunk and s % run.attn_chunk == 0
+    if window and chunked:
+        out = L._sdpa_window(q, kr, v, window=window, chunk=run.attn_chunk)
+    elif chunked:
+        # prefill is forward-only: the dynamic-bound causal skip is legal
+        out = L._sdpa_flash(q, kr, v, causal=True, chunk=run.attn_chunk,
+                            dynamic_skip=True,
+                            f32_scores=run.attn_f32_scores)
+    else:
+        out = L._sdpa_dense(q, kr, v, causal=causal, window=window)
+    b, s_, hh, dh = out.shape
+    y = out.reshape(b, s_, hh * dh) @ p["wo"].astype(L._dtype(run))
+
+    if kind == "local":
+        w = min(cfg.window, cache_len or cfg.window)
+        m = min(w, s)
+        t0 = s - m
+        slots = (t0 + jnp.arange(m)) % w
+        ck = jnp.zeros((b, w) + kr.shape[2:], kr.dtype).at[:, slots].set(
+            kr[:, t0:])
+        cv = jnp.zeros((b, w) + v.shape[2:], v.dtype).at[:, slots].set(
+            v[:, t0:])
+    else:
+        length = cache_len or s
+        ck = jnp.zeros((b, length) + kr.shape[2:], kr.dtype).at[:, :s].set(kr)
+        cv = jnp.zeros((b, length) + v.shape[2:], v.dtype).at[:, :s].set(v)
+    return y, {"k": ck, "v": cv}
+
+
+def _rglru_with_cache(p, x, cfg, run):
+    dt = L._dtype(run)
+    xb_pre = x @ p["wx"].astype(dt)
+    xb, _ = L._causal_conv(xb_pre, p["conv"])
+    gate = jax.nn.gelu(x @ p["wgate"].astype(dt))
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wr"])
+    i = jax.nn.sigmoid(xf @ p["wi"])
+    h = L._rglru_core(xf, r, i, p["lam"])
+    out = ((gate.astype(jnp.float32) * h).astype(dt)) @ p["wo"].astype(dt)
+    width = cfg.ssm_conv - 1
+    conv_state = jnp.pad(xb_pre, ((0, 0), (max(0, width - xb_pre.shape[1]), 0),
+                                  (0, 0)))[:, -width:]
+    return out, {"h": h[:, -1], "conv": conv_state}
+
+
+def _ssd_with_cache(p, x, cfg, run):
+    # run the chunked SSD but keep the final inter-chunk state + conv tail
+    dt_ = L._dtype(run)
+    b, s, _ = x.shape
+    din, nst = cfg.d_inner, cfg.ssm_state
+    z, xbc_pre, dtr = L._ssd_split(p, x, cfg, run)
+    width = cfg.ssm_conv - 1
+    conv_state = jnp.pad(xbc_pre, ((0, 0), (max(0, width - s), 0),
+                                   (0, 0)))[:, -width:]
+    out, h_final = _ssd_train_with_state(p, x, cfg, run)
+    return out, {"conv": conv_state, "h": h_final}
+
+
+def _ssd_train_with_state(p, x, cfg, run, chunk: int = 128):
+    """ssd_train plus the final state (same math, returns the scan carry)."""
+    dt_ = L._dtype(run)
+    b, s, _ = x.shape
+    din, nst, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dtr = L._ssd_split(p, x, cfg, run)
+    xbc, _ = L._causal_conv(xbc, p["conv"])
+    xs = xbc[..., :din]
+    bmat = xbc[..., din:din + nst].astype(jnp.float32)
+    cmat = xbc[..., din + nst:].astype(jnp.float32)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    da = dt * a
+    xh = xs.reshape(b, s, nh, hp).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+
+    q = min(chunk, s)
+    nc = s // q
+    da_c = da.reshape(b, nc, q, nh)
+    cum = jnp.cumsum(da_c, axis=2)
+    tot = cum[:, :, -1]
+    xdt_c = xdt.reshape(b, nc, q, nh, hp)
+    b_c = bmat.reshape(b, nc, q, nst)
+    c_c = cmat.reshape(b, nc, q, nst)
+    att = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    ii, jj = jnp.arange(q)[:, None], jnp.arange(q)[None, :]
+    lmask = jnp.where((jj <= ii)[None, None, :, :, None], jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", att, lmask, xdt_c)
+    sdecay = jnp.exp(tot[:, :, None, :] - cum)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", b_c, sdecay, xdt_c)
+
+    def scan_fn(h, inp):
+        st, t = inp
+        return h * jnp.exp(t)[..., None, None] + st, h
+
+    h0 = jnp.zeros((b, nh, nst, hp), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        scan_fn, h0, (states.transpose(1, 0, 2, 3, 4), tot.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", c_c, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(b, s, nh, hp)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, s, din)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    return y @ p["out_proj"].astype(dt_), h_final
+
+
+def _block_decode(p, x, cache, kind, cfg, run, pos):
+    new = {}
+    if kind in ("global", "local"):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        out, kv = L.attention_decode(p["attn"], h, cache, pos, cfg, run,
+                                     kind=kind)
+        new.update(kv)
+        x = x + out
+        if "cross" in p:
+            hc = L.apply_norm(p["cross_norm"], x, cfg)
+            x = x + L.cross_attention_decode(p["cross"], hc, cache["cross"],
+                                             cfg, run)
+            new["cross"] = cache["cross"]
+        h2 = L.apply_norm(p["norm2"], x, cfg)
+        ffn = (L.moe_mlp(p["ffn"], h2, cfg, run) if cfg.n_experts
+               else L.mlp(p["ffn"], h2, cfg, run))
+        x = x + ffn
+    elif kind == "rglru":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        out, rc = L.rglru_decode(p["rglru"], h, cache, cfg, run)
+        new.update(rc)
+        x = x + out
+        h2 = L.apply_norm(p["norm2"], x, cfg)
+        x = x + L.mlp(p["ffn"], h2, cfg, run)
+    elif kind == "ssd":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        out, sc = L.ssd_decode(p["ssd"], h, cache, cfg, run)
+        new.update(sc)
+        x = x + out
+    return x, new
+
+
+# ---------------------------------------------------------------------------
+# stacks (scan over cycle repeats + unrolled tail)
+# ---------------------------------------------------------------------------
+
+def _remat(fn, run: RunConfig):
+    if run.remat == "full":
+        return jax.checkpoint(fn)
+    if run.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _apply_stack(stack_params, x, cfg, run, positions, kinds=None, enc=None,
+                 causal=True):
+    from .sharding_ctx import constrain
+    cycle, _, tail = _cycle_info(cfg)
+    if kinds is not None:
+        cycle, tail = kinds, ()
+
+    def cycle_body(xc, per_pos_params):
+        for pos, kind in enumerate(cycle):
+            xc = _block_train(per_pos_params[pos], xc, kind, cfg, run,
+                              positions, enc=enc, causal=causal)
+            if run.act_shard == "seq":
+                # Megatron-SP: residual sharded over (batch->dp, seq->tp);
+                # XLA turns the TP all-reduces into reduce-scatter+all-gather
+                # pairs and norms compute shard-local.
+                xc = constrain(xc, ("dp", "tp", None))
+        return xc, None
+
+    body = _remat(cycle_body, run)
+    if stack_params["scan"] is not None:
+        x, _ = jax.lax.scan(body, x, stack_params["scan"])
+    for p, kind in zip(stack_params["tail"], tail):
+        x = _block_train(p, x, kind, cfg, run, positions, enc=enc,
+                         causal=causal)
+    return x
+
+
+def _apply_stack_prefill(stack_params, x, cfg, run, positions, cache_len):
+    cycle, _, tail = _cycle_info(cfg)
+
+    def cycle_body(xc, per_pos_params):
+        caches = []
+        for pos, kind in enumerate(cycle):
+            xc, c = _block_train(per_pos_params[pos], xc, kind, cfg, run,
+                                 positions, return_cache=True,
+                                 cache_len=cache_len)
+            caches.append(c)
+        return xc, caches
+
+    caches = {"scan": None, "tail": []}
+    if stack_params["scan"] is not None:
+        x, caches["scan"] = jax.lax.scan(cycle_body, x, stack_params["scan"])
+    for p, kind in zip(stack_params["tail"], tail):
+        x, c = _block_train(p, x, kind, cfg, run, positions,
+                            return_cache=True, cache_len=cache_len)
+        caches["tail"].append(c)
+    return x, caches
+
+
+def _apply_stack_decode(stack_params, caches, x, cfg, run, pos):
+    cycle, _, tail = _cycle_info(cfg)
+
+    def cycle_body(xc, inp):
+        pp, cc = inp
+        news = []
+        for i, kind in enumerate(cycle):
+            xc, nc = _block_decode(pp[i], xc, cc[i], kind, cfg, run, pos)
+            news.append(nc)
+        return xc, news
+
+    new_caches = {"scan": None, "tail": []}
+    if stack_params["scan"] is not None:
+        x, new_caches["scan"] = jax.lax.scan(
+            cycle_body, x, (stack_params["scan"], caches["scan"]))
+    for p, c, kind in zip(stack_params["tail"], caches["tail"], tail):
+        x, nc = _block_decode(p, x, c, kind, cfg, run, pos)
+        new_caches["tail"].append(nc)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg, run):
+    x = params["embed"][tokens].astype(L._dtype(run))
+    return x * math.sqrt(cfg.d_model)
+
+
+def _logits(params, x, cfg, run):
+    xn = L.apply_norm(params["final_norm"], x, cfg)
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(L._dtype(run))
+    logits = (xn @ w).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:       # mask the padding columns
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad, -1e30, logits)
+    return logits
+
+
+def _ce_loss(logits, labels):
+    """Masked mean CE; labels == -1 are padding."""
+    valid = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    losses = (logz - ll) * valid
+    return losses.sum() / jnp.maximum(valid.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def train_loss(params, batch, cfg: ArchConfig, run: RunConfig):
+    if cfg.family == "encdec":
+        return _train_loss_encdec(params, batch, cfg, run)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed(params, tokens, cfg, run)
+    offset = 0
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(L._dtype(run))
+        patches = patches @ params["frontend_proj"].astype(L._dtype(run))
+        x = jnp.concatenate([patches, x], axis=1)
+        offset = patches.shape[1]
+    positions = jnp.arange(x.shape[1])[None, :]
+    x = _apply_stack(params["blocks"], x, cfg, run, positions)
+    if offset:
+        x = x[:, offset:]
+    logits = _logits(params, x, cfg, run)
+    return _ce_loss(logits, batch["labels"])
+
+
+def _train_loss_encdec(params, batch, cfg, run):
+    dt = L._dtype(run)
+    frames = batch["frames"].astype(dt) @ params["frontend_proj"].astype(dt)
+    pos_e = jnp.arange(frames.shape[1])[None, :]
+    enc = _apply_stack(params["encoder"], frames, cfg, run, pos_e,
+                       kinds=("global",), causal=False)
+    enc = L.apply_norm(params["enc_norm"], enc, cfg)
+    x = _embed(params, batch["tokens"], cfg, run)
+    pos_d = jnp.arange(x.shape[1])[None, :]
+    x = _apply_stack(params["blocks"], x, cfg, run, pos_d, enc=enc)
+    logits = _logits(params, x, cfg, run)
+    return _ce_loss(logits, batch["labels"])
+
+
+def init_cache(cfg: ArchConfig, run: RunConfig, batch: int, max_len: int):
+    """Zeroed decode cache matching the scan/tail structure."""
+    cycle, repeats, tail = _cycle_info(cfg)
+
+    def one(kind):
+        if kind in ("global", "local"):
+            c = L.init_attn_cache(cfg, run, batch, max_len, kind)
+            if cfg.family == "encdec":
+                dh, kv = cfg.head_dim_, cfg.n_kv_heads
+                c["cross"] = {
+                    "k": jnp.zeros((batch, max_len, kv, dh), L._dtype(run)),
+                    "v": jnp.zeros((batch, max_len, kv, dh), L._dtype(run))}
+            return c
+        if kind == "rglru":
+            return L.init_rglru_cache(cfg, run, batch)
+        if kind == "ssd":
+            return L.init_ssd_cache(cfg, run, batch)
+        raise ValueError(kind)
+
+    scan_caches = None
+    if repeats:
+        scan_caches = [
+            jax.tree_util.tree_map(lambda x: jnp.broadcast_to(
+                x, (repeats,) + x.shape), one(kind))
+            for kind in cycle]
+    return {"scan": scan_caches, "tail": [one(k) for k in tail]}
+
+
+def prefill(params, batch, cfg: ArchConfig, run: RunConfig,
+            cache_len: int = 0):
+    """Process the prompt, return (last-position logits, decode cache)."""
+    if cfg.family == "encdec":
+        return _prefill_encdec(params, batch, cfg, run, cache_len)
+    tokens = batch["tokens"]
+    x = _embed(params, tokens, cfg, run)
+    offset = 0
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(L._dtype(run))
+        patches = patches @ params["frontend_proj"].astype(L._dtype(run))
+        x = jnp.concatenate([patches, x], axis=1)
+        offset = patches.shape[1]
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, caches = _apply_stack_prefill(params["blocks"], x, cfg, run, positions,
+                                     cache_len or x.shape[1])
+    logits = _logits(params, x[:, -1:], cfg, run)
+    return logits[:, 0], caches
+
+
+def _prefill_encdec(params, batch, cfg, run, cache_len):
+    dt = L._dtype(run)
+    frames = batch["frames"].astype(dt) @ params["frontend_proj"].astype(dt)
+    pos_e = jnp.arange(frames.shape[1])[None, :]
+    enc = _apply_stack(params["encoder"], frames, cfg, run, pos_e,
+                       kinds=("global",), causal=False)
+    enc = L.apply_norm(params["enc_norm"], enc, cfg)
+    x = _embed(params, batch["tokens"], cfg, run)
+    pos_d = jnp.arange(x.shape[1])[None, :]
+    x, caches = _apply_stack_prefill(params["blocks"], x, cfg, run, pos_d,
+                                     cache_len or x.shape[1])
+    # fill cross caches from the encoder output per decoder layer
+    caches = _fill_cross(params, caches, enc, cfg, run)
+    logits = _logits(params, x[:, -1:], cfg, run)
+    return logits[:, 0], caches
+
+
+def _fill_cross(params, caches, enc, cfg, run):
+    dt = L._dtype(run)
+    kv, dh = cfg.n_kv_heads, cfg.head_dim_
+
+    def kvproj(p):
+        k = (enc @ p["cross"]["wk"].astype(dt)).reshape(
+            enc.shape[0], enc.shape[1], kv, dh)
+        v = (enc @ p["cross"]["wv"].astype(dt)).reshape(
+            enc.shape[0], enc.shape[1], kv, dh)
+        return {"k": k, "v": v}
+
+    if caches["scan"] is not None:
+        for pos, pc in enumerate(params["blocks"]["scan"]):
+            caches["scan"][pos]["cross"] = jax.vmap(kvproj)(pc)
+    for i, p in enumerate(params["blocks"]["tail"]):
+        caches["tail"][i]["cross"] = kvproj(p)
+    return caches
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, run: RunConfig):
+    """tokens: (B, 1) int32; pos: scalar int32 (next position to write)."""
+    x = _embed(params, tokens, cfg, run)
+    x, new_cache = _apply_stack_decode(params["blocks"], cache, x, cfg, run,
+                                       pos)
+    logits = _logits(params, x, cfg, run)
+    return logits[:, 0], new_cache

@@ -1,0 +1,88 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule + optional int8
+error-feedback gradient compression for the data-parallel all-reduce.
+
+All states are pytrees shaped like the params, so the sharding rules that
+place the params place the optimizer states identically (ZeRO-style when
+``fsdp`` is on: states live sharded over the data axis with the params).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lr_schedule(step, base_lr: float, warmup: int, total: int = 100_000):
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+    return {"mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+        newp = p.astype(jnp.float32) - lr * (step + weight_decay * p)
+        return newp.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression (optional DP all-reduce trick)
+# ---------------------------------------------------------------------------
+
+def compress_init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_decompress(grads, residual):
+    """Quantize grad+residual to int8 per-tensor scale; return the
+    dequantized value and the new residual (error feedback).  Used before a
+    DP all-reduce to cut its bytes 4x; the residual keeps the bias bounded."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), x - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    deq = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    res = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return deq, res

@@ -1,0 +1,142 @@
+"""Per-architecture smoke: every assigned arch instantiates a REDUCED config
+of the same family and runs forward / train / prefill+decode on CPU, with a
+prefill<->decode consistency check (cache correctness)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, RunConfig, cell_enabled
+from repro.models import make_model
+
+RUN = RunConfig(seq_len=32, global_batch=2, dtype="float32", attn_chunk=8)
+B, S = 2, 32
+
+
+def _batch(cfg, rng, with_labels=True):
+    if cfg.family == "encdec":
+        b = {"frames": jnp.asarray(
+                rng.normal(size=(B, S, cfg.d_model)), jnp.float32),
+             "tokens": jnp.asarray(
+                 rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+        if with_labels:
+            b["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        return b
+    if cfg.frontend == "vision":
+        nt = S - cfg.n_patches
+        b = {"patches": jnp.asarray(
+                rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.float32),
+             "tokens": jnp.asarray(
+                 rng.integers(0, cfg.vocab, (B, nt)), jnp.int32)}
+        if with_labels:
+            b["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, (B, nt)), jnp.int32)
+        return b
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if with_labels:
+        b["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    return b
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_reduced_train_step(name):
+    cfg = ARCHS[name].reduced()
+    rng = np.random.default_rng(0)
+    model = make_model(cfg)
+    params = model["init"](RUN, jax.random.PRNGKey(0))
+    loss = jax.jit(lambda p, b: model["train_loss"](p, b, RUN))(
+        params, _batch(cfg, rng))
+    assert np.isfinite(float(loss)), name
+    assert 0.0 < float(loss) < 20.0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_reduced_prefill_decode(name):
+    cfg = ARCHS[name].reduced()
+    rng = np.random.default_rng(1)
+    model = make_model(cfg)
+    params = model["init"](RUN, jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng, with_labels=False)
+    logits, cache = jax.jit(
+        lambda p, b: model["prefill"](p, b, RUN, 48))(params, batch)
+    assert np.isfinite(np.asarray(logits)).all(), name
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    lg, cache = jax.jit(
+        lambda p, c, t: model["decode_step"](p, c, t, jnp.int32(S), RUN))(
+        params, cache, tok)
+    assert np.isfinite(np.asarray(lg)).all(), name
+
+
+@pytest.mark.parametrize("name", ["olmo-1b", "mamba2-370m",
+                                  "recurrentgemma-2b", "gemma3-4b"])
+def test_decode_matches_full_forward(name):
+    """Prefill S-1 tokens, decode token S-1; its logits must equal the full
+    forward's logits at the last position (cache correctness)."""
+    cfg = ARCHS[name].reduced()
+    rng = np.random.default_rng(2)
+    model = make_model(cfg)
+    params = model["init"](RUN, jax.random.PRNGKey(0))
+    toks = rng.integers(0, cfg.vocab, (B, S)).astype(np.int32)
+
+    # full forward logits at last position, via prefill over all S tokens
+    full_logits, _ = jax.jit(lambda p, b: model["prefill"](p, b, RUN, S))(
+        params, {"tokens": jnp.asarray(toks)})
+
+    # prefill S-1, then decode the final token
+    _, cache = jax.jit(lambda p, b: model["prefill"](p, b, RUN, S))(
+        params, {"tokens": jnp.asarray(toks[:, :-1])})
+    dec_logits, _ = jax.jit(
+        lambda p, c, t: model["decode_step"](p, c, t, jnp.int32(S - 1), RUN))(
+        params, cache, jnp.asarray(toks[:, -1:]))
+
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_exact_assigned_configs():
+    """The full configs carry the exact assigned hyperparameters."""
+    c = ARCHS["gemma3-4b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (34, 2560, 8, 4, 10240, 262144)
+    c = ARCHS["phi3-medium-14b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (40, 5120, 40, 10, 17920, 100352)
+    c = ARCHS["qwen3-moe-30b-a3b"]
+    assert (c.n_experts, c.experts_per_tok) == (128, 8)
+    c = ARCHS["moonshot-v1-16b-a3b"]
+    assert (c.n_experts, c.experts_per_tok) == (64, 6)
+    c = ARCHS["mamba2-370m"]
+    assert (c.n_layers, c.d_model, c.ssm_state) == (48, 1024, 128)
+    c = ARCHS["whisper-large-v3"]
+    assert (c.n_enc_layers, c.n_layers, c.d_model) == (32, 32, 1280)
+
+
+def test_cell_grid_skips():
+    """long_500k only runs for sub-quadratic archs (DESIGN.md section 5)."""
+    expected_runs = {"gemma3-4b", "h2o-danube-1.8b", "recurrentgemma-2b",
+                     "mamba2-370m"}
+    runs = {a for a in ARCHS if cell_enabled(ARCHS[a], "long_500k")[0]}
+    assert runs == expected_runs
+    for a in ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_enabled(ARCHS[a], s)[0]
+
+
+def test_param_counts_in_family_range():
+    """Full configs land near their nameplate sizes."""
+    expect = {"gemma3-4b": (3.0, 5.0), "h2o-danube-1.8b": (1.5, 2.2),
+              "phi3-medium-14b": (12, 16), "olmo-1b": (0.9, 1.4),
+              "qwen3-moe-30b-a3b": (28, 33), "recurrentgemma-2b": (2.2, 3.0),
+              "whisper-large-v3": (1.3, 1.9), "mamba2-370m": (0.3, 0.45),
+              "internvl2-1b": (0.4, 0.8)}
+    for name, (lo, hi) in expect.items():
+        n = ARCHS[name].param_count() / 1e9
+        assert lo <= n <= hi, (name, n)
+    # MoE active params
+    assert 2.5 <= ARCHS["qwen3-moe-30b-a3b"].active_param_count() / 1e9 <= 4.0

@@ -1,0 +1,84 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import models
+from repro.core.partition import lpt_pack, strategy_costs
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 5),
+       v=st.integers(5, 40), d=st.integers(2, 15))
+def test_elbo_monotone_random_lda(seed, k, v, d):
+    """CAVI guarantees a non-decreasing ELBO for ANY corpus and model size."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(20, 200))
+    toks = rng.integers(0, v, n).astype(np.int32)
+    docs = np.sort(rng.integers(0, d, n)).astype(np.int32)
+    m = models.make("lda", alpha=float(rng.uniform(0.05, 2.0)),
+                    beta=float(rng.uniform(0.05, 2.0)), K=k, V=v)
+    m["x"].observe(toks, segment_ids=docs)
+    m.infer(steps=6, seed=seed % 7)
+    diffs = np.diff(m.elbo_trace)
+    scale = max(abs(m.elbo_trace[0]), 1.0)
+    assert (diffs >= -1e-5 * scale).all(), diffs
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.integers(1, 32),
+       n=st.integers(1, 500))
+def test_lpt_pack_balance(seed, m, n):
+    """Greedy LPT: max load <= mean + max weight (and every group placed)."""
+    rng = np.random.default_rng(seed)
+    w = rng.integers(1, 100, size=n)
+    assign = lpt_pack(w, m)
+    assert assign.shape == (n,)
+    assert (assign >= 0).all() and (assign < m).all()
+    loads = np.bincount(assign, weights=w, minlength=m)
+    assert loads.max() <= w.sum() / m + w.max() + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1_000, 10_000_000), d=st.integers(10, 10_000),
+       k=st.integers(1, 256), m=st.integers(2, 1024))
+def test_inferspark_partitioning_dominates(n, d, k, m):
+    """Paper Tables 1-2: the tailor-made strategy has no replication of data
+    vertices and the smallest (asymptotic) largest-partition bound."""
+    costs = strategy_costs(n, d, k, m)
+    inf = costs["InferSpark"]
+    assert inf["E_Nxi"] == 1.0
+    for other in ("1D", "RVC", "CRVC"):
+        assert inf["E_Nxi"] <= costs[other]["E_Nxi"] + 1e-9
+    # largest partition: O(N/M) beats 1D's O(N) whenever M >= 4
+    if m >= 4:
+        assert inf["E_NB"] <= costs["1D"]["E_NB"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), b=st.integers(1, 3),
+       s=st.integers(4, 24), h=st.integers(1, 4))
+def test_rope_preserves_norm(seed, b, s, h):
+    import jax.numpy as jnp
+    from repro.models.layers import rope
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, s, h, 16)).astype(np.float32))
+    pos = jnp.arange(s)[None, :]
+    y = rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(1, 64), e=st.integers(2, 8),
+       k=st.integers(1, 3))
+def test_moe_router_weights_sum_to_one(seed, n, e, k):
+    import jax
+    import jax.numpy as jnp
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(n, e)).astype(np.float32))
+    w, ids = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(w, axis=-1)
+    np.testing.assert_allclose(np.asarray(w).sum(-1), 1.0, rtol=1e-5)

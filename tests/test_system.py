@@ -1,0 +1,99 @@
+"""End-to-end behaviour of the paper's system: the full InferSpark workflow
+(define -> observe -> infer -> query) and the LM framework's driver path."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import models
+from repro.data import SyntheticCorpus
+
+
+def test_paper_workflow_lda_end_to_end():
+    """The complete Figure 7 experience at small scale: build the model from
+    the DSL, observe an RDD-analogue of tokens, infer with a convergence
+    callback, query posteriors + ELBO."""
+    corpus = SyntheticCorpus(n_docs=40, vocab=60, n_topics=4,
+                             mean_len=80, seed=0).generate()
+    m = models.make("lda", alpha=0.1, beta=0.05, K=4, V=60)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+
+    history = []
+
+    def until_converged(i, elbo):
+        history.append(elbo)
+        if len(history) < 2:
+            return True
+        return (history[-1] - history[-2]) > 1e-3 * abs(history[-2])
+
+    m.infer(steps=100, callback=until_converged)
+    assert 5 < len(history) < 100            # converged before the cap
+    assert m.lower_bound == history[-1]
+
+    phi = m["phi"].get_result()
+    theta = m["theta"].get_result()
+    assert phi.shape == (4, 60) and theta.shape == (40, 4)
+
+    # responsibilities for the latent z are queryable too
+    r = m["z"].get_result()
+    assert r.shape == (len(corpus["tokens"]), 4)
+    np.testing.assert_allclose(r.sum(-1), 1.0, rtol=1e-4)
+
+
+def test_reobserve_recompiles():
+    """New data on the same model instance triggers re-compilation
+    (metadata collection is per-observation, paper section 3.3)."""
+    m = models.make("lda", alpha=0.1, beta=0.1, K=2, V=10)
+    m["x"].observe(np.array([0, 1, 2], np.int32),
+                   segment_ids=np.array([0, 0, 1], np.int32))
+    m.infer(steps=3)
+    first = m["theta"].get_result().shape
+    m["x"].observe(np.arange(8, dtype=np.int32) % 10,
+                   segment_ids=np.repeat(np.arange(4, dtype=np.int32), 2))
+    m.infer(steps=3)
+    assert m["theta"].get_result().shape == (4, 2) != first
+
+
+def test_lm_trainer_end_to_end(tmp_path):
+    """Train a tiny LM through the fault-tolerant trainer: loss decreases,
+    checkpoints appear, resume continues from the saved step."""
+    from repro.configs import ARCHS, RunConfig
+    from repro.launch.train import train
+
+    cfg = dataclasses.replace(ARCHS["olmo-1b"].reduced(), n_layers=2)
+    run = RunConfig(seq_len=32, global_batch=4, dtype="float32",
+                    learning_rate=3e-3, warmup=0)
+    d = str(tmp_path / "ck")
+    _, _, losses, tel = train(cfg, run, steps=8, checkpoint_dir=d,
+                              checkpoint_every=4, log_every=0)
+    assert len(losses) == 8
+    # fresh random batches of uniform tokens: the loss starts at the entropy
+    # floor ln(vocab); assert stability, not descent (memorization descent is
+    # covered by test_optim::test_train_loss_decreases_tiny_model)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] + 0.1
+    assert tel.summary()["steps"] == 8
+
+    # resume: picks up at step 8
+    _, _, losses2, _ = train(cfg, run, steps=2, checkpoint_dir=d,
+                             checkpoint_every=4, log_every=0)
+    assert len(losses2) == 2
+    assert np.isfinite(losses2).all()
+
+
+def test_serve_end_to_end():
+    """Batched serving: prefill + decode produce a deterministic greedy
+    continuation."""
+    from repro.configs import ARCHS, RunConfig
+    from repro.launch.serve import serve
+
+    cfg = dataclasses.replace(ARCHS["olmo-1b"].reduced(), n_layers=2)
+    run = RunConfig(seq_len=16, global_batch=2, dtype="float32")
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (2, 16)).astype(np.int32)
+    toks, stats = serve(cfg, run, prompts, new_tokens=8)
+    toks2, _ = serve(cfg, run, prompts, new_tokens=8)
+    np.testing.assert_array_equal(toks, toks2)
+    assert toks.shape == (2, 8)
+    assert stats["tokens_per_s"] > 0

@@ -1,0 +1,181 @@
+"""Correctness of the VMP engine against an independent handwritten CAVI
+reference, plus the ELBO invariants the algorithm guarantees."""
+
+import numpy as np
+import pytest
+from jax.scipy.special import digamma, gammaln
+
+from repro.core import models
+from repro.core.vmp import init_state
+
+import jax.numpy as jnp
+
+
+def _make_corpus(seed=0, K=3, V=30, D=20):
+    rng = np.random.default_rng(seed)
+    phi = rng.dirichlet(np.full(V, 0.08), size=K)
+    theta = rng.dirichlet(np.full(K, 0.3), size=D)
+    lens = rng.integers(15, 50, size=D)
+    toks, docs = [], []
+    for d in range(D):
+        zs = rng.choice(K, size=lens[d], p=theta[d])
+        for z in zs:
+            toks.append(rng.choice(V, p=phi[z]))
+            docs.append(d)
+    return np.array(toks, np.int32), np.array(docs, np.int32), phi
+
+
+def _reference_lda_cavi(tokens, docs, K, V, alpha, beta, init, iters):
+    """Independent numpy CAVI for LDA (the math the engine must reproduce)."""
+    D = docs.max() + 1
+    theta_post = init["theta"].copy()       # (D, K)
+    phi_post = init["phi"].copy()           # (K, V)
+    elbos = []
+
+    def elog(a):
+        return digamma(a) - digamma(a.sum(-1, keepdims=True))
+
+    def logB(a):
+        return gammaln(a).sum(-1) - gammaln(a.sum(-1))
+
+    for _ in range(iters):
+        et, ep = elog(theta_post), elog(phi_post)
+        logits = et[docs] + ep[:, tokens].T             # (N, K)
+        m = logits.max(1, keepdims=True)
+        # ELBO at (r*, current posteriors): logsumexp + Dirichlet terms
+        lse = (m[:, 0] + np.log(np.exp(logits - m).sum(1)))
+        elbo = lse.sum()
+        elbo += (logB(theta_post) - logB(np.full_like(theta_post, alpha))
+                 + ((alpha - theta_post) * et).sum(-1)).sum()
+        elbo += (logB(phi_post) - logB(np.full_like(phi_post, beta))
+                 + ((beta - phi_post) * ep).sum(-1)).sum()
+        elbos.append(elbo)
+        r = np.exp(logits - m)
+        r /= r.sum(1, keepdims=True)
+        theta_post = alpha + np.array(
+            [r[docs == d].sum(0) for d in range(D)])
+        phi_post = beta + np.array(
+            [np.bincount(tokens, weights=r[:, k], minlength=V)
+             for k in range(K)])
+    return elbos
+
+
+def test_lda_matches_handwritten_cavi():
+    K, V = 3, 30
+    toks, docs, _ = _make_corpus(K=K, V=V)
+    m = models.make("lda", alpha=0.2, beta=0.1, K=K, V=V)
+    m["x"].observe(toks, segment_ids=docs)
+    prog = m.compile()
+    state0 = init_state(prog, seed=0)
+    init = {"theta": np.asarray(state0.posteriors["theta"], np.float64),
+            "phi": np.asarray(state0.posteriors["phi"], np.float64)}
+    ref = _reference_lda_cavi(toks, docs, K, V, 0.2, 0.1, init, iters=8)
+    m.infer(steps=8)
+    got = m.elbo_trace
+    np.testing.assert_allclose(got, ref, rtol=2e-4)
+
+
+def test_lda_posterior_counts_conserved():
+    toks, docs, _ = _make_corpus(seed=1)
+    m = models.make("lda", alpha=0.1, beta=0.1, K=3, V=30)
+    m["x"].observe(toks, segment_ids=docs)
+    m.infer(steps=5)
+    theta = m["theta"].get_result()
+    # sum of (posterior - prior) over all docs == number of tokens
+    total = theta.sum() - theta.shape[0] * theta.shape[1] * 0.1
+    assert abs(total - len(toks)) < 1e-2 * len(toks)
+    phi = m["phi"].get_result()
+    total_phi = phi.sum() - phi.shape[0] * phi.shape[1] * 0.1
+    assert abs(total_phi - len(toks)) < 1e-2 * len(toks)
+
+
+def test_two_coins_posterior_predictive():
+    """A single toss per draw makes the mixture unidentifiable (only
+    pi1*phi1 + pi2*phi2 is observable), so the verifiable quantity is the
+    posterior predictive P(head), which must match the empirical rate."""
+    rng = np.random.default_rng(0)
+    pick = rng.random(4000) < 0.5
+    x = np.where(pick, rng.random(4000) < 0.9,
+                 rng.random(4000) < 0.1).astype(np.int32)
+    m = models.make("two_coins")
+    m["x"].observe(x)
+    m.infer(steps=60)
+    pi = m["pi"].get_result()[0]            # Dirichlet(2) posterior
+    phi = m["phi"].get_result()             # (2, 2) Beta posteriors
+    e_pi = pi / pi.sum()
+    e_head = phi[:, 1] / phi.sum(axis=1)
+    predictive = float((e_pi * e_head).sum())
+    assert abs(predictive - x.mean()) < 0.02
+    # monotone up to float32 noise at convergence (relative tolerance)
+    tol = 1e-5 * abs(m.elbo_trace[-1])
+    assert (np.diff(m.elbo_trace) >= -tol).all()
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("lda", dict(alpha=0.1, beta=0.1, K=4, V=25)),
+    ("dcmlda", dict(alpha=0.4, beta=0.4, K=3, V=25)),
+    ("naive_bayes", dict(alpha=1.0, beta=0.3, C=3, V=25)),
+])
+def test_elbo_monotone(name, kw):
+    toks, docs, _ = _make_corpus(seed=2, V=25)
+    m = models.make(name, **kw)
+    m["x"].observe(toks, segment_ids=docs)
+    m.infer(steps=12)
+    diffs = np.diff(m.elbo_trace)
+    assert (diffs >= -1e-3).all(), diffs
+
+
+def test_slda_nested_plates():
+    rng = np.random.default_rng(3)
+    S = 80
+    sent_doc = np.sort(rng.integers(0, 12, size=S)).astype(np.int32)
+    tok_sent = np.repeat(np.arange(S, dtype=np.int32),
+                         rng.integers(3, 9, size=S))
+    xs = rng.integers(0, 20, size=len(tok_sent)).astype(np.int32)
+    m = models.make("slda", alpha=0.2, beta=0.2, K=3, V=20)
+    m["x"].observe(xs, segment_ids=tok_sent)
+    m.bind("sents", sent_doc)
+    m.infer(steps=10)
+    assert (np.diff(m.elbo_trace) >= -1e-3).all()
+    # phi is shared across docs: shape (K, V)
+    assert m["phi"].get_result().shape == (3, 20)
+    # theta per doc
+    assert m["theta"].get_result().shape == (12, 3)
+
+
+def test_callback_early_stop():
+    toks, docs, _ = _make_corpus(seed=4)
+    m = models.make("lda", alpha=0.1, beta=0.1, K=3, V=30)
+    m["x"].observe(toks, segment_ids=docs)
+    calls = []
+
+    def cb(i, elbo):
+        calls.append(elbo)
+        return len(calls) < 4          # stop after 4 iterations
+
+    m.infer(steps=50, callback=cb)
+    assert len(calls) == 4
+    assert len(m.elbo_trace) == 4
+
+
+def test_lda_recovers_planted_topics():
+    K, V = 3, 30
+    toks, docs, true_phi = _make_corpus(seed=5, K=K, V=V, D=60)
+    m = models.make("lda", alpha=0.1, beta=0.1, K=K, V=V)
+    m["x"].observe(toks, segment_ids=docs)
+    m.infer(steps=40)
+    post = m["phi"].get_result()
+    est = post / post.sum(-1, keepdims=True)
+    # greedy-match estimated topics to planted ones by TV distance
+    used, dists = set(), []
+    for k in range(K):
+        best, best_d = None, 2.0
+        for j in range(K):
+            if j in used:
+                continue
+            d = 0.5 * np.abs(est[j] - true_phi[k]).sum()
+            if d < best_d:
+                best, best_d = j, d
+        used.add(best)
+        dists.append(best_d)
+    assert np.mean(dists) < 0.35, dists
