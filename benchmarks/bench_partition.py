@@ -22,7 +22,7 @@ _MEASURE_SNIPPET = r"""
 import os, sys, time
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.core import models
 from repro.core.partition import ShardingPlan
 from repro.data import SyntheticCorpus
@@ -30,7 +30,7 @@ from repro.launch import hlo_cost
 
 corpus = SyntheticCorpus(n_docs=400, vocab=2000, n_topics=16,
                          mean_len=120, seed=0).generate()
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 for strat in ("inferspark", "gspmd", "replicated"):
     m = models.make("lda", alpha=0.1, beta=0.05, K=16, V=2000)
     m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])

@@ -19,7 +19,7 @@ _SCALE_OUT_SNIPPET = r"""
 import os, sys, time
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
 import jax, numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.core import models
 from repro.core.partition import ShardingPlan
 from repro.data import SyntheticCorpus
@@ -29,7 +29,7 @@ corpus = SyntheticCorpus(n_docs=600, vocab=2000, n_topics=16,
                          mean_len=120, seed=0).generate()
 m = models.make("lda", alpha=0.1, beta=0.05, K=16, V=2000)
 m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
-mesh = jax.make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((n_dev,), ("data",))
 plan = ShardingPlan(mesh, ("data",), "inferspark")
 m.infer(steps=2, sharding=plan)          # warmup + compile
 t0 = time.time()

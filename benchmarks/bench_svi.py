@@ -1,0 +1,71 @@
+"""The streaming engine's headline claim: a fixed held-out ELBO on a corpus
+4x the largest full-batch benchmark corpus (bench_scaling tops out at 600
+docs / ~72k tokens; this runs 2400 docs / ~288k tokens), at a per-step
+working set that scales with the minibatch, not the corpus.
+
+Protocol: a short full-batch VMP run (same held-out split, via the engine
+API) sets the target held-out per-token ELBO; SVI then streams document
+minibatches until it matches the target within tolerance.  Reported
+alongside: per-step time for both engines and the token working-set ratio
+(max padded batch tokens / corpus tokens) — the memory-bound evidence.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import SVI, SVIConfig, make_engine, models
+from repro.data import SyntheticCorpus
+
+TOL = 0.02            # nats/token slack on the target
+
+
+def _model(corpus, K, V):
+    m = models.make("lda", alpha=0.1, beta=0.05, K=K, V=V)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    return m
+
+
+def run(report):
+    K, V = 16, 2000
+    corpus = SyntheticCorpus(n_docs=2400, vocab=V, n_topics=K,
+                             mean_len=120, seed=0).generate()
+    n = len(corpus["tokens"])
+
+    # target: held-out ELBO of a short full-batch run on the training slice
+    t0 = time.time()
+    vmp = make_engine("vmp", steps=15, holdout_frac=0.02, seed=0) \
+        .fit(_model(corpus, K, V))
+    t_vmp = time.time() - t0
+    target = vmp.heldout_elbo
+    report("svi_target_heldout_elbo_vmp15", t_vmp / 15 * 1e6,
+           f"tokens={n};target={target:.4f};vmp_total_s={t_vmp:.1f}")
+
+    cfg = SVIConfig(batch_size=128, holdout_frac=0.02, holdout_every=5,
+                    pad_multiple=2048, kappa=0.7, tau=10.0, seed=0)
+    svi = SVI(_model(corpus, K, V).compile(), cfg)
+    state = None
+    reached, steps_done, h = None, 0, float("-inf")
+    t0 = time.time()
+    while steps_done < 400 and reached is None:
+        state, hist = svi.fit(steps=5, state=state)
+        steps_done += 5
+        h = hist["heldout"][-1][1]
+        if h >= target - TOL:
+            reached = steps_done
+    t_svi = time.time() - t0
+
+    # working set: largest padded batch token cap across compiled traces
+    tok_caps = [dict(sig).get("x", 0) for sig in svi._steps]
+    max_cap = max(tok_caps) if tok_caps else 0
+    report("svi_steps_to_target", (t_svi / max(steps_done, 1)) * 1e6,
+           f"steps={reached};heldout={h:.4f};target={target:.4f};"
+           f"svi_total_s={t_svi:.1f}")
+    report("svi_working_set_ratio", max_cap,
+           f"batch_token_cap={max_cap};corpus_tokens={n};"
+           f"ratio={max_cap / n:.4f}")
+    assert reached is not None, (
+        f"SVI failed to reach target {target:.4f} (got {h:.4f})")
+    assert max_cap < n / 4, "working set should be a small fraction of N"

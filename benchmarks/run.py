@@ -6,6 +6,8 @@
     bench_partition  Figure 20 + Tables 1-2 (partition strategies, analytic
                      + measured, replicated-memory anecdote)
     bench_kernels    VMP hot-loop primitives
+    bench_svi        streaming SVI vs full-batch VMP at 4x the largest
+                     full-batch corpus (held-out ELBO target + working set)
 
 Prints ``name,us_per_call,derived`` CSV.  Select modules with
 ``python -m benchmarks.run [vmp|scaling|partition|kernels] ...``.
@@ -21,9 +23,11 @@ def _report(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def main() -> None:
-    from benchmarks import bench_kernels, bench_partition, bench_scaling, bench_vmp
+    from benchmarks import (bench_kernels, bench_partition, bench_scaling,
+                            bench_svi, bench_vmp)
     mods = {"vmp": bench_vmp, "scaling": bench_scaling,
-            "partition": bench_partition, "kernels": bench_kernels}
+            "partition": bench_partition, "kernels": bench_kernels,
+            "svi": bench_svi}
     picks = [a for a in sys.argv[1:] if a in mods] or list(mods)
     print("name,us_per_call,derived")
     for p in picks:

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import models
+from repro.compat import make_mesh
 from repro.core.partition import ShardingPlan, make_distributed_step
 from repro.launch import hlo_cost
 
@@ -30,8 +31,7 @@ def check_vmp_parity():
     doc_len = rng.integers(10, 80, size=D)
     toks = rng.integers(0, V, size=doc_len.sum())
     docs = np.repeat(np.arange(D), doc_len)
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     traces = {}
     for strat in ["replicated", "inferspark", "gspmd"]:
         m = models.make("lda", alpha=0.1, beta=0.1, K=K, V=V)
@@ -50,13 +50,40 @@ def check_vmp_parity():
     print("PASS vmp_parity")
 
 
+def check_svi_distributed_parity():
+    """Sharded SVI (per-shard minibatches, psum'd global stats, delta-merged
+    local rows) must match the single-device engine on the same schedule."""
+    from repro.core.svi import SVI, SVIConfig
+    from repro.data import SyntheticCorpus
+    corpus = SyntheticCorpus(n_docs=48, vocab=50, n_topics=4, mean_len=60,
+                             seed=5).generate()
+    mesh = make_mesh((8,), ("data",))
+
+    def run(plan):
+        m = models.make("lda", alpha=0.1, beta=0.1, K=4, V=50)
+        m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+        svi = SVI(m.compile(), SVIConfig(batch_size=16, holdout_frac=0.1,
+                                         pad_multiple=64, seed=0), plan=plan)
+        state, hist = svi.fit(steps=15)
+        return state, hist["heldout"][-1][1]
+
+    s_single, h_single = run(None)
+    s_shard, h_shard = run(ShardingPlan(mesh, ("data",), "inferspark"))
+    for name in s_single.posteriors:
+        a = np.asarray(s_single.posteriors[name])
+        b = np.asarray(s_shard.posteriors[name])
+        err = np.max(np.abs(a - b)) / max(np.max(np.abs(a)), 1e-9)
+        assert err < 1e-4, (name, err)
+    assert abs(h_single - h_shard) < 1e-3, (h_single, h_shard)
+    print("PASS svi_parity")
+
+
 def check_vmp_collectives():
     K, V, D = 4, 40, 30
     doc_len = rng.integers(10, 80, size=D)
     toks = rng.integers(0, V, size=doc_len.sum())
     docs = np.repeat(np.arange(D), doc_len)
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     m = models.make("lda", alpha=0.1, beta=0.1, K=K, V=V)
     m["x"].observe(toks, segment_ids=docs)
     prog = m.compile()
@@ -83,8 +110,7 @@ def check_lm_train_2d_mesh():
     cfg = dataclasses.replace(ARCHS["qwen3-moe-30b-a3b"].reduced(),
                               n_layers=2, n_experts=4, experts_per_tok=2)
     run = RunConfig(seq_len=32, global_batch=8, dtype="float32", fsdp=True)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     built = build_train_step(cfg, run, mesh)
     model = make_model(cfg)
     params = model["init"](run, jax.random.PRNGKey(0))
@@ -134,8 +160,7 @@ def check_long_context_sp_decode():
 
     cfg = dataclasses.replace(ARCHS["mamba2-370m"].reduced(), n_layers=2)
     run = RunConfig(seq_len=64, global_batch=1, dtype="float32")
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     model = make_model(cfg)
     cache_abs = jax.eval_shape(lambda: model["init_cache"](run, 1, 64))
     built = build_decode_step(cfg, run, mesh)
@@ -150,6 +175,7 @@ def check_long_context_sp_decode():
 
 if __name__ == "__main__":
     check_vmp_parity()
+    check_svi_distributed_parity()
     check_vmp_collectives()
     check_lm_train_2d_mesh()
     check_elastic_remesh()

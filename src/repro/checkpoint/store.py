@@ -35,8 +35,10 @@ def _flatten(tree) -> tuple[list[np.ndarray], object]:
     return [np.asarray(x) for x in leaves], treedef
 
 
-def save(directory: str, step: int, tree, *, blocking: bool = True) -> str:
-    """Write one checkpoint; returns its path."""
+def save(directory: str, step: int, tree) -> str:
+    """Write one checkpoint (blocking); returns its path.  Async commits are
+    the :class:`CheckpointStore`'s job — it tracks the threads so failures
+    and stragglers surface in ``wait()`` instead of dying silently."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:010d}")
     tmp = final + ".tmp"
@@ -44,22 +46,14 @@ def save(directory: str, step: int, tree, *, blocking: bool = True) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     leaves, treedef = _flatten(tree)
-
-    def _commit():
-        np.savez(os.path.join(tmp, "leaves.npz"),
-                 **{f"leaf_{i}": leaf for i, leaf in enumerate(leaves)})
-        with open(os.path.join(tmp, _MANIFEST), "w") as f:
-            json.dump({"step": step, "n_leaves": len(leaves),
-                       "treedef": str(treedef), "time": time.time()}, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-
-    if blocking:
-        _commit()
-    else:
-        t = threading.Thread(target=_commit, daemon=True)
-        t.start()
+    np.savez(os.path.join(tmp, "leaves.npz"),
+             **{f"leaf_{i}": leaf for i, leaf in enumerate(leaves)})
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves),
+                   "treedef": str(treedef), "time": time.time()}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
     return final
 
 
@@ -101,15 +95,42 @@ class CheckpointStore:
         self.every = max(1, every)
         self.keep = max(1, keep)
         self.blocking = blocking
+        self._pending: list[threading.Thread] = []
+        self._errors: list[BaseException] = []
 
     def maybe_save(self, step: int, tree) -> bool:
         if step % self.every != 0:
             return False
         # leaves must be host-complete before the async thread serializes
         tree = jax.tree_util.tree_map(np.asarray, tree)
-        save(self.directory, step, tree, blocking=self.blocking)
+        if self.blocking:
+            save(self.directory, step, tree)
+        else:
+            # tracked (non-fire-and-forget) async commit: wait() joins them,
+            # so a run's final checkpoint is durable before the run returns
+            def _commit(s=step, tr=tree):
+                try:
+                    save(self.directory, s, tr)
+                except BaseException as e:          # surfaced by wait()
+                    self._errors.append(e)
+
+            t = threading.Thread(target=_commit, daemon=True)
+            t.start()
+            # keep the list O(in-flight): drop threads that already landed
+            self._pending = [p for p in self._pending if p.is_alive()]
+            self._pending.append(t)
         self._gc()
         return True
+
+    def wait(self) -> None:
+        """Block until every in-flight async commit has landed; re-raise
+        the first failure (a silently dropped checkpoint is not durable)."""
+        for t in self._pending:
+            t.join()
+        self._pending = []
+        if self._errors:
+            err, self._errors = self._errors[0], []
+            raise RuntimeError("async checkpoint save failed") from err
 
     def _gc(self):
         steps = _complete_steps(self.directory)
@@ -118,7 +139,9 @@ class CheckpointStore:
                           ignore_errors=True)
 
     def latest(self) -> int | None:
+        self.wait()
         return latest_step(self.directory)
 
     def restore(self, tree_like, step: int | None = None):
+        self.wait()
         return restore(self.directory, tree_like, step)

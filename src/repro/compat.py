@@ -1,0 +1,38 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The codebase targets the modern jax API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``check_vma``); older runtimes (0.4.x) spell
+these ``jax.experimental.shard_map.shard_map``, have no axis types, and
+call the replication check ``check_rep``.  Every mesh/shard_map construction
+in the repo goes through these two helpers so the rest of the code can be
+written against one API.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    _AxisType = None
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types where the runtime supports
+    them (explicit-sharding-safe) and plain axes elsewhere."""
+    if _AxisType is not None:
+        return jax.make_mesh(shape, axes, devices=devices,
+                             axis_types=(_AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (new) or ``jax.experimental.shard_map`` (old),
+    with the replication/VMA check disabled under either spelling."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

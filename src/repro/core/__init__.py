@@ -4,6 +4,9 @@ fault-tolerant runtime."""
 
 from .dsl import Model, ModelBuilder, build  # noqa: F401
 from .network import BayesianNetwork, CategoricalRV, DirichletRV, Plate  # noqa: F401
-from .compiler import VMPProgram, compile_program  # noqa: F401
+from .compiler import VMPProgram, compile_program, slice_arrays, sliced_shadow  # noqa: F401
 from .vmp import VMPState, full_elbo, init_state  # noqa: F401
+from .engine import EngineConfig, InferenceEngine, InferenceResult, make_engine  # noqa: F401
+from .metrics import aligned_tv  # noqa: F401
+from .svi import SVI, SVIConfig  # noqa: F401
 from . import models  # noqa: F401

@@ -152,6 +152,14 @@ class Model:
         self._program = None
         return self
 
+    def reset(self):
+        """Drop inference state (posteriors, step fn, ELBO trace) so the
+        next ``infer`` starts fresh; the compiled program is kept."""
+        self._state = None
+        self._step_fn = None
+        self._elbo_trace = []
+        return self
+
     # -- inference --------------------------------------------------------
     def compile(self, sharding=None):
         """Metadata collection + "code generation" (trace & jit)."""

@@ -261,11 +261,11 @@ def make_distributed_step(program: VMPProgram, plan: ShardingPlan, seed: int = 0
                      for n, p in new.posteriors.items()}
         return VMPState(out_posts, new.step), elbo
 
-    sharded = jax.shard_map(
+    from repro.compat import shard_map
+    sharded = shard_map(
         body, mesh=mesh,
         in_specs=(in_state_specs, arr_specs),
-        out_specs=(in_state_specs, P()),
-        check_vma=False)
+        out_specs=(in_state_specs, P()))
     compiled = jax.jit(sharded, donate_argnums=(0,))
 
     def step(state):

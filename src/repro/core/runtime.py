@@ -67,4 +67,6 @@ def run_inference(program: VMPProgram, steps: int = 20,
             store.maybe_save(i + 1, state)
         if callback is not None and callback(i, elbo_f) is False:
             break
+    if store is not None:
+        store.wait()              # final async checkpoint durable on return
     return state, trace

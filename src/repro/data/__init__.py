@@ -1,1 +1,2 @@
-from .pipeline import SyntheticCorpus, TokenStream  # noqa: F401
+from .pipeline import (MinibatchSampler, SyntheticCorpus,  # noqa: F401
+                       TokenStream, holdout_split)

@@ -60,6 +60,53 @@ class SyntheticCorpus:
 
 
 @dataclasses.dataclass
+class MinibatchSampler:
+    """Seekable document-minibatch sampler for the streaming VMP engine.
+
+    Samples without replacement within an epoch: the group order is a fresh
+    permutation keyed by ``(seed, epoch)``, so — like :class:`TokenStream` —
+    ``batch_at(step)`` is a pure function of (seed, step) and a restarted
+    job resumes its schedule bitwise-identically.  Batches are returned
+    sorted (instance order inside a sliced program then matches the
+    corpus's group-major order, which keeps full-batch slicing an identity).
+    """
+    groups: np.ndarray               # group ids to sample over (e.g. doc ids)
+    batch_size: int
+    seed: int = 0
+    shuffle: bool = True
+
+    def __post_init__(self):
+        self.groups = np.asarray(self.groups, np.int64)
+        if self.batch_size <= 0:
+            raise ValueError("batch_size must be positive")
+        if len(self.groups) == 0:
+            raise ValueError("no groups to sample")
+
+    @property
+    def batches_per_epoch(self) -> int:
+        return -(-len(self.groups) // self.batch_size)
+
+    def batch_at(self, step: int) -> np.ndarray:
+        epoch, idx = divmod(int(step), self.batches_per_epoch)
+        if self.shuffle:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, epoch]))
+            perm = rng.permutation(self.groups)
+        else:
+            perm = self.groups
+        lo = idx * self.batch_size
+        return np.sort(perm[lo:lo + self.batch_size])
+
+
+def holdout_split(n_groups: int, frac: float, seed: int = 0):
+    """Deterministic (train, holdout) group split; both sorted."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_groups)
+    n_hold = int(round(frac * n_groups))
+    return np.sort(perm[n_hold:]), np.sort(perm[:n_hold])
+
+
+@dataclasses.dataclass
 class TokenStream:
     """Packed LM batches; ``batch_at`` is pure in (seed, step, shard)."""
     vocab: int

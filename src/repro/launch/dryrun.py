@@ -66,9 +66,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     if mesh_shape:
         # per-arch mesh factorization (same 256 chips, different DPxTP split)
         dims = tuple(int(x) for x in mesh_shape.split("x"))
-        mesh = jax.make_mesh(dims, ("data", "model")[:len(dims)],
-                             axis_types=(jax.sharding.AxisType.Auto,)
-                             * len(dims))
+        from repro.compat import make_mesh
+        mesh = make_mesh(dims, ("data", "model")[:len(dims)])
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod(list(mesh.shape.values())))
@@ -103,6 +102,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # older jax: list of per-device dicts
+        cost = cost[0] if cost else {}
     mem = _mem_dict(compiled.memory_analysis())
     try:
         hlo = compiled.as_text()

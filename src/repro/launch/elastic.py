@@ -13,8 +13,8 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
 
+from repro.compat import make_mesh
 from repro.configs import RunConfig
 
 
@@ -30,8 +30,7 @@ def factor_mesh(n_devices: int, want_model: int = 0):
                 break
             m //= 2
     data = n_devices // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 def remesh_and_resume(cfg, run: RunConfig, checkpoint_dir: str,

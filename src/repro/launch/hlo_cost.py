@@ -89,14 +89,18 @@ class _Comp:
 
 
 def _split_operands(rest: str) -> tuple[list[str], str]:
-    """Split the top-level operand list 'a, b, c), attrs...' -> names."""
+    """Split the top-level operand list 'a, b, c), attrs...' -> names.
+
+    Operands may carry inline types (older HLO emitters: ``f32[4,64]{1,0}
+    %arg``) whose brackets/braces contain commas, so depth tracks all three
+    bracket kinds."""
     depth = 0
     out, cur = [], []
     for i, ch in enumerate(rest):
-        if ch == "(" :
+        if ch in "([{":
             depth += 1
             cur.append(ch)
-        elif ch == ")":
+        elif ch in ")]}":
             if depth == 0:
                 out.append("".join(cur).strip())
                 return [o for o in out if o], rest[i + 1:]
@@ -108,6 +112,11 @@ def _split_operands(rest: str) -> tuple[list[str], str]:
         else:
             cur.append(ch)
     return [o for o in out if o], ""
+
+
+def _operand_name(operand: str) -> str:
+    """'f32[4,64]{1,0} %get-tuple-element.4' or '%x' or 'x' -> symbol name."""
+    return operand.split()[-1].lstrip("%") if operand else ""
 
 
 def parse_computations(hlo: str) -> dict[str, _Comp]:
@@ -140,7 +149,7 @@ def _dot_flops(op: _Op, comp: _Comp) -> float:
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
     if not m or not op.operands:
         return 0.0
-    lhs_name = op.operands[0].lstrip("%")
+    lhs_name = _operand_name(op.operands[0])
     lhs_type = comp.symbols.get(lhs_name, "")
     _, lhs_dims = _shape_dims(lhs_type)
     contract = 1
@@ -161,9 +170,11 @@ def _op_traffic(op: _Op, comp: _Comp, with_operands: bool = False) -> int:
     total = _shape_bytes(op.type_str)
     if with_operands:
         for o in op.operands:
-            o = o.lstrip("%")
+            o = _operand_name(o)
             if o in comp.symbols:
                 total += _shape_bytes(comp.symbols[o])
+            elif "[" in o:            # inline-typed operand, type is the name
+                total += _shape_bytes(o)
     return total
 
 

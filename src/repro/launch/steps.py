@@ -34,6 +34,44 @@ def _install_ctx(mesh):
     set_ctx(mesh, data_axes(mesh), model_axis(mesh))
 
 
+def build_infer_step(program, engine="vmp"):
+    """Probabilistic-inference analogue of :func:`build_train_step`: build
+    ``(step_fn, state0)`` for a compiled :class:`~repro.core.compiler.VMPProgram`
+    with the backend picked by config — full-batch VMP or streaming SVI
+    (optionally sharded via ``EngineConfig.sharding``).  The result feeds
+    :func:`repro.core.runtime.run_inference` directly, so callbacks and
+    checkpointing work identically across backends.  Gibbs is not a
+    step machine; use ``repro.core.engine.make_engine("gibbs").fit``.
+    """
+    from repro.core.engine import EngineConfig
+    from repro.core.runtime import make_step
+    from repro.core.svi import SVI, SVIConfig
+    from repro.core.vmp import init_state
+
+    if isinstance(engine, str):
+        engine = EngineConfig(backend=engine)
+    if engine.backend == "vmp":
+        if engine.sharding is not None:
+            from repro.core.partition import make_distributed_step
+            return make_distributed_step(program, engine.sharding,
+                                         seed=engine.seed)
+        return make_step(program), init_state(program, engine.seed)
+    if engine.backend == "svi":
+        svi = SVI(program, SVIConfig(
+            batch_size=engine.batch_size, kappa=engine.kappa, tau=engine.tau,
+            local_iters=engine.local_iters, pad_multiple=engine.pad_multiple,
+            holdout_frac=engine.holdout_frac,
+            holdout_every=engine.holdout_every, seed=engine.seed),
+            plan=engine.sharding)
+
+        def step_fn(state):
+            return svi.step(int(state.step), state)
+
+        step_fn.svi = svi                   # heldout_elbo / sampler access
+        return step_fn, init_state(program, engine.seed)
+    raise ValueError(f"no step builder for backend {engine.backend!r}")
+
+
 def build_train_step(cfg: ArchConfig, run: RunConfig, mesh):
     model = make_model(cfg)
     _install_ctx(mesh)

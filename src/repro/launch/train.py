@@ -120,6 +120,8 @@ def train(cfg, run: RunConfig, steps: int, mesh=None,
         if log_every and (i % log_every == 0 or straggle):
             print(f"[train] step {i:5d} loss {loss:8.4f} "
                   f"{dt*1e3:7.1f} ms{'  STRAGGLER' if straggle else ''}")
+    if store is not None:
+        store.wait()              # final async checkpoint durable on return
     return params, opt_state, losses, telemetry
 
 

@@ -1,9 +1,11 @@
 """Data pipeline: determinism, seekability, shard disjointness, corpus
-statistics."""
+statistics, minibatch sampling."""
 
 import numpy as np
+import pytest
 
-from repro.data import SyntheticCorpus, TokenStream
+from repro.data import (MinibatchSampler, SyntheticCorpus, TokenStream,
+                        holdout_split)
 
 
 def test_stream_deterministic_and_seekable():
@@ -50,6 +52,46 @@ def test_corpus_deterministic():
     a = SyntheticCorpus(n_docs=10, vocab=50, n_topics=3, seed=9).generate()
     b = SyntheticCorpus(n_docs=10, vocab=50, n_topics=3, seed=9).generate()
     np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_minibatch_sampler_seekable_and_deterministic():
+    a = MinibatchSampler(groups=np.arange(37), batch_size=10, seed=4)
+    b = MinibatchSampler(groups=np.arange(37), batch_size=10, seed=4)
+    np.testing.assert_array_equal(a.batch_at(11), b.batch_at(11))
+    assert a.batches_per_epoch == 4
+
+
+def test_minibatch_sampler_epoch_without_replacement():
+    s = MinibatchSampler(groups=np.arange(23), batch_size=5, seed=0)
+    for epoch in (0, 1):
+        seen = np.concatenate([s.batch_at(epoch * 5 + i) for i in range(5)])
+        np.testing.assert_array_equal(np.sort(seen), np.arange(23))
+    # epochs are differently permuted
+    assert any(not np.array_equal(s.batch_at(i), s.batch_at(5 + i))
+               for i in range(5))
+
+
+def test_minibatch_sampler_no_shuffle_is_identity_order():
+    s = MinibatchSampler(groups=np.arange(12), batch_size=12, seed=0,
+                        shuffle=False)
+    np.testing.assert_array_equal(s.batch_at(0), np.arange(12))
+
+
+def test_minibatch_sampler_validates():
+    with pytest.raises(ValueError):
+        MinibatchSampler(groups=np.arange(5), batch_size=0)
+    with pytest.raises(ValueError):
+        MinibatchSampler(groups=np.array([], np.int64), batch_size=2)
+
+
+def test_holdout_split_partitions():
+    train, hold = holdout_split(100, 0.15, seed=3)
+    assert len(hold) == 15 and len(train) == 85
+    assert not set(train) & set(hold)
+    np.testing.assert_array_equal(np.sort(np.concatenate([train, hold])),
+                                  np.arange(100))
+    t2, h2 = holdout_split(100, 0.15, seed=3)
+    np.testing.assert_array_equal(hold, h2)
 
 
 def test_domain_reweighting():

@@ -1,10 +1,16 @@
 """Gibbs LDA (the paper's future-work MCMC engine): correctness + the
-reproducibility property that justifies it in a distributed setting."""
+reproducibility property that justifies it in a distributed setting.
+
+Default variants are short (the suite must finish in minutes); full-length
+chains run behind ``-m slow`` / ``--runslow``.
+"""
 
 import numpy as np
+import pytest
 
 from repro.core import models
 from repro.core.gibbs import gibbs_lda
+from repro.core.metrics import aligned_tv
 from repro.data import SyntheticCorpus
 
 
@@ -13,48 +19,46 @@ def _corpus(seed=0, K=3, V=40, docs=60):
                            seed=seed).generate()
 
 
-def test_gibbs_recovers_planted_topics():
+@pytest.mark.parametrize("iters,burnin,tol", [
+    pytest.param(80, 40, 0.5, id="quick"),
+    pytest.param(150, 75, 0.4, id="full", marks=pytest.mark.slow),
+])
+def test_gibbs_recovers_planted_topics(iters, burnin, tol):
     K, V = 3, 40
     c = _corpus(K=K, V=V)
     _, phi, lls = gibbs_lda(c["tokens"], c["doc_ids"], K, V,
-                            iters=150, burnin=75, seed=0)
+                            iters=iters, burnin=burnin, seed=0)
     # burn-in improves complete-data log-likelihood
-    assert lls[100:].mean() > lls[:20].mean()
-    used, dists = set(), []
-    for k in range(K):
-        best, best_d = None, 2.0
-        for j in range(K):
-            if j not in used:
-                dd = 0.5 * np.abs(phi[j] - c["true_phi"][k]).sum()
-                if dd < best_d:
-                    best, best_d = j, dd
-        used.add(best)
-        dists.append(best_d)
-    assert np.mean(dists) < 0.4, dists
+    assert lls[burnin:].mean() > lls[:burnin // 4].mean()
+    assert aligned_tv(phi, c["true_phi"]) < tol
 
 
 def test_gibbs_deterministic_counter_rng():
     """The paper's distributed-RNG objection dissolved: same seed => bitwise
     identical chains, no shared generator state."""
     c = _corpus(seed=1)
-    t1, p1, l1 = gibbs_lda(c["tokens"], c["doc_ids"], 3, 40, iters=30,
-                           burnin=10, seed=7)
-    t2, p2, l2 = gibbs_lda(c["tokens"], c["doc_ids"], 3, 40, iters=30,
-                           burnin=10, seed=7)
+    t1, p1, l1 = gibbs_lda(c["tokens"], c["doc_ids"], 3, 40, iters=12,
+                           burnin=4, seed=7)
+    t2, p2, l2 = gibbs_lda(c["tokens"], c["doc_ids"], 3, 40, iters=12,
+                           burnin=4, seed=7)
     np.testing.assert_array_equal(l1, l2)
     np.testing.assert_array_equal(p1, p2)
 
 
-def test_gibbs_agrees_with_vmp_predictive():
+@pytest.mark.parametrize("iters_g,steps_v", [
+    pytest.param(80, 20, id="quick"),
+    pytest.param(200, 40, id="full", marks=pytest.mark.slow),
+])
+def test_gibbs_agrees_with_vmp_predictive(iters_g, steps_v):
     """Two inference engines, one model: the posterior-predictive word
     distributions should agree (coarsely) on the same corpus."""
     K, V = 4, 30
     c = _corpus(seed=2, K=K, V=V)
     _, phi_g, _ = gibbs_lda(c["tokens"], c["doc_ids"], K, V,
-                            iters=200, burnin=100, seed=0)
+                            iters=iters_g, burnin=iters_g // 2, seed=0)
     m = models.make("lda", alpha=0.1, beta=0.05, K=K, V=V)
     m["x"].observe(c["tokens"], segment_ids=c["doc_ids"])
-    m.infer(steps=40)
+    m.infer(steps=steps_v)
     phi_post = m["phi"].get_result()
     phi_v = phi_post / phi_post.sum(-1, keepdims=True)
     # corpus-level word marginal under each engine's phi, weighted by usage

@@ -1,0 +1,156 @@
+"""The streaming minibatch (SVI) engine: exact degenerate cases, padding
+invariance, and held-out ELBO agreement with the full-batch engine."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import models
+from repro.core.runtime import make_step
+from repro.core.svi import (SVI, SVIConfig, device_batch, heldout_elbo,
+                            make_svi_step, robbins_monro)
+from repro.core.vmp import init_state
+
+
+def _one_svi_step(prog, state, groups, rho=1.0, scale=1.0, caps_fn=None):
+    batch, caps, _ = device_batch(prog, groups, caps_fn)
+    step = make_svi_step(prog, caps, local_iters=1, donate=False)
+    return step(state, batch, jnp.float32(rho), jnp.float32(scale))
+
+
+def test_full_batch_rho1_is_bitwise_vmp(lda_program):
+    """|B| = all docs and rho = 1: one SVI step IS the full-batch VMP
+    update — bitwise, not approximately."""
+    prog = lda_program
+    state0 = init_state(prog, seed=0)
+    s_full, e_full = make_step(prog, donate=False)(state0)
+    s_svi, e_svi = _one_svi_step(
+        prog, state0, np.arange(prog.meta["pstar_size"]))
+    for name in s_full.posteriors:
+        np.testing.assert_array_equal(np.asarray(s_full.posteriors[name]),
+                                      np.asarray(s_svi.posteriors[name]))
+    assert float(e_full) == float(e_svi)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("dcmlda", dict(alpha=0.4, beta=0.4, K=3, V=30)),      # local phi + base
+    ("naive_bayes", dict(alpha=1.0, beta=0.3, C=3, V=30)), # doc-level latent
+])
+def test_full_batch_bitwise_other_models(small_corpus, name, kw):
+    m = models.make(name, **kw)
+    m["x"].observe(small_corpus["tokens"],
+                   segment_ids=small_corpus["doc_ids"])
+    prog = m.compile()
+    state0 = init_state(prog, seed=0)
+    s_full, _ = make_step(prog, donate=False)(state0)
+    s_svi, _ = _one_svi_step(prog, state0,
+                             np.arange(prog.meta["pstar_size"]))
+    for n in s_full.posteriors:
+        np.testing.assert_array_equal(np.asarray(s_full.posteriors[n]),
+                                      np.asarray(s_svi.posteriors[n]))
+
+
+def test_padding_does_not_change_the_update(lda_program):
+    """Masked padding of every sliced axis must be update-invariant."""
+    prog = lda_program
+    state0 = init_state(prog, seed=0)
+    groups = np.arange(0, 20)
+    s_exact, e_exact = _one_svi_step(prog, state0, groups, rho=0.5, scale=2.0)
+    s_pad, e_pad = _one_svi_step(
+        prog, state0, groups, rho=0.5, scale=2.0,
+        caps_fn=lambda name, n: -(-max(n, 1) // 64) * 64)
+    np.testing.assert_allclose(float(e_exact), float(e_pad), rtol=1e-5)
+    for n in s_exact.posteriors:
+        np.testing.assert_allclose(np.asarray(s_exact.posteriors[n]),
+                                   np.asarray(s_pad.posteriors[n]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_untouched_docs_keep_their_posterior(lda_program):
+    """A minibatch step only writes the batch's local rows."""
+    prog = lda_program
+    state0 = init_state(prog, seed=0)
+    groups = np.arange(5, 15)
+    s1, _ = _one_svi_step(prog, state0, groups, rho=0.3, scale=5.0)
+    theta0 = np.asarray(state0.posteriors["theta"])
+    theta1 = np.asarray(s1.posteriors["theta"])
+    out = np.setdiff1d(np.arange(prog.meta["pstar_size"]), groups)
+    np.testing.assert_array_equal(theta0[out], theta1[out])
+    assert not np.allclose(theta0[groups], theta1[groups])
+
+
+def test_robbins_monro_schedule():
+    rhos = [robbins_monro(t, tau=10.0, kappa=0.7) for t in range(200)]
+    assert all(0 < r <= 1 for r in rhos)
+    assert all(a > b for a, b in zip(rhos, rhos[1:]))      # monotone decay
+    with pytest.raises(ValueError):
+        SVIConfig(kappa=0.4)                               # outside (0.5, 1]
+    with pytest.raises(ValueError):
+        SVIConfig(tau=-1.0)
+
+
+def test_svi_heldout_elbo_matches_batch_vmp(lda_program):
+    """On a planted corpus the streaming engine must converge to (within
+    tolerance of) the full-batch optimum, measured by held-out per-token
+    ELBO with the identical holdout split."""
+    prog = lda_program
+    # full-batch reference: rho=1, |B|=train — exact VMP on the train slice
+    vmp = SVI(prog, SVIConfig(batch_size=10**9, rho=1.0, shuffle=False,
+                              pad_multiple=0, holdout_frac=0.1,
+                              holdout_every=0, seed=0))
+    v_state, _ = vmp.fit(steps=25)
+    v_held = vmp.heldout_elbo(v_state)
+
+    svi = SVI(prog, SVIConfig(batch_size=12, holdout_frac=0.1,
+                              holdout_every=0, pad_multiple=64,
+                              kappa=0.7, tau=10.0, seed=0))
+    s_state, _ = svi.fit(steps=80)
+    s_held = svi.heldout_elbo(s_state)
+
+    np.testing.assert_array_equal(vmp.holdout, svi.holdout)
+    assert np.isfinite(v_held) and np.isfinite(s_held)
+    assert abs(s_held - v_held) < 0.05, (s_held, v_held)
+
+
+def test_svi_resumes_schedule_from_state(lda_program):
+    """fit() continues the Robbins-Monro schedule at state.step: two
+    segments equal one long run."""
+    cfg = SVIConfig(batch_size=10, pad_multiple=32, holdout_frac=0.0,
+                    seed=3)
+    one = SVI(lda_program, cfg)
+    s_long, _ = one.fit(steps=12)
+    two = SVI(lda_program, cfg)
+    s_a, _ = two.fit(steps=5)
+    s_b, _ = two.fit(steps=7, state=s_a)
+    assert int(s_b.step) == int(s_long.step) == 12
+    for n in s_long.posteriors:
+        np.testing.assert_allclose(np.asarray(s_long.posteriors[n]),
+                                   np.asarray(s_b.posteriors[n]),
+                                   rtol=1e-6)
+
+
+def test_heldout_elbo_excludes_training_docs(lda_program):
+    """Held-out groups never enter a training batch."""
+    svi = SVI(lda_program, SVIConfig(batch_size=7, holdout_frac=0.2, seed=1))
+    seen = set()
+    for t in range(3 * svi.sampler.batches_per_epoch):
+        seen.update(svi.sampler.batch_at(t).tolist())
+    assert seen == set(svi.train.tolist())
+    assert not seen & set(svi.holdout.tolist())
+
+
+def test_slda_minibatch_runs(small_corpus):
+    """The zmap (nested-plate) path under slicing: SLDA minibatches."""
+    n = len(small_corpus["tokens"])
+    sent_of_tok = (np.arange(n) // 7).astype(np.int32)
+    doc_of_sent = small_corpus["doc_ids"][::7][:sent_of_tok.max() + 1]
+    m = models.make("slda", alpha=0.2, beta=0.2, K=3, V=30)
+    m["x"].observe(small_corpus["tokens"], segment_ids=sent_of_tok)
+    m.bind("sents", doc_of_sent)
+    svi = SVI(m.compile(), SVIConfig(batch_size=8, pad_multiple=32,
+                                     holdout_frac=0.1, holdout_every=5,
+                                     seed=0))
+    state, hist = svi.fit(steps=10)
+    assert len(hist["elbo"]) == 10
+    assert np.isfinite(hist["heldout"][-1][1])
