@@ -2,8 +2,14 @@
 
 Times the production path (jnp oracle on CPU; the Pallas kernels target TPU
 and are validated for correctness in interpret mode by tests).  Derived
-column reports achieved elements/s and the arithmetic intensity the kernel
-removes (fused vs unfused HBM passes).
+column reports achieved elements/s and the HBM traffic the fused kernels
+remove (see docs/performance.md for the traffic model).
+
+The headline case is ``kernel_zstats_*``: the fused one-pass
+gather->softmax->stats substep (``ref.zstats``, the production step body's
+path) against the unfused gather + zstep + segment_sum chain it replaced —
+the chain materializes the (N, K) logits and responsibilities, the fused
+pass streams them chunk-at-a-time.
 """
 
 from __future__ import annotations
@@ -18,13 +24,36 @@ from repro.kernels import ref
 
 
 def _time(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
-    t0 = time.time()
+    """Min-of-iters wall time: robust to scheduler noise on shared hosts."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.time() - t0)
+    return best
+
+
+def _lda_corpus(rng, n, k, d, v):
+    toks = jnp.asarray(rng.integers(0, v, n).astype(np.int32))
+    docs = jnp.asarray(np.sort(rng.integers(0, d, n)).astype(np.int32))
+    et = jnp.asarray(rng.normal(size=(d, k)).astype(np.float32))
+    ep = jnp.asarray(rng.normal(size=(k, v)).astype(np.float32))
+    return toks, docs, et, ep
+
+
+def _zstats_hbm_bytes(n, k, d, v):
+    """Per-call HBM bytes of the token-plate substep (fp32, TPU model).
+
+    unfused: 2 (N,K) gather reads + write/read logits + write r + 2 r
+    re-reads (one per stats scatter) + stats accumulator traffic.
+    fused:   token index streams (the tables are VMEM-resident and the
+    (N, K) intermediates never leave VMEM) + one stats flush.
+    """
+    tables = d * k + k * v
+    unfused = 4 * (7 * n * k + 2 * tables)
+    fused = 4 * (2 * n + 2 * tables)
+    return unfused, fused
 
 
 def run(report):
@@ -35,7 +64,7 @@ def run(report):
         f = jax.jit(ref.dirichlet_expectation)
         dt = _time(f, a)
         report(f"kernel_dirichlet_expectation_{g}x{k}", dt * 1e6,
-               f"elems_per_s={g*k/dt:.3e}")
+               f"elems_per_s={g*k/dt:.3e}", dims={"g": g, "k": k})
 
     for n, k in ((500_000, 16), (100_000, 96)):
         x = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
@@ -43,4 +72,32 @@ def run(report):
         dt = _time(f, x)
         # unfused = 3 HBM passes (max, exp/sum, div); fused kernel = 1
         report(f"kernel_zstep_{n}x{k}", dt * 1e6,
-               f"rows_per_s={n/dt:.3e};fused_hbm_passes=1_vs_3")
+               f"rows_per_s={n/dt:.3e};fused_hbm_passes=1_vs_3",
+               dims={"n": n, "k": k})
+
+    # fused token-plate substep vs the chain it replaced, LDA-shaped.
+    # Keep the largest (N, K) last: the acceptance gate for the fusion.
+    for n, k, d, v in ((200_000, 64, 2_000, 10_000),
+                       (600_000, 128, 5_000, 20_000)):
+        toks, docs, et, ep = _lda_corpus(rng, n, k, d, v)
+
+        def unfused(et, ep, docs, toks, d=d, v=v):
+            logits = et[docs] + ep[:, toks].T
+            r, lse = ref.zstep(logits)
+            ts = jnp.zeros((d, et.shape[1]), jnp.float32).at[docs].add(r)
+            ps = jax.ops.segment_sum(r, toks, num_segments=v).T
+            return lse.sum(), ts, ps
+
+        u = jax.jit(unfused)
+        f = jax.jit(lambda et, ep, docs, toks:
+                    ref.zstats(et, docs, (ref.ZChild(ep, toks, 1),)))
+        dt_u = _time(u, et, ep, docs, toks, iters=8)
+        dt_f = _time(f, et, ep, docs, toks, iters=8)
+        b_u, b_f = _zstats_hbm_bytes(n, k, d, v)
+        dims = {"n": n, "k": k, "d": d, "v": v}
+        report(f"kernel_zstats_unfused_{n}x{k}", dt_u * 1e6,
+               f"tokens_per_s={n/dt_u:.3e};hbm_bytes={b_u:.3e}", dims=dims)
+        report(f"kernel_zstats_fused_{n}x{k}", dt_f * 1e6,
+               f"tokens_per_s={n/dt_f:.3e};hbm_bytes={b_f:.3e};"
+               f"hbm_bytes_ratio={b_u/b_f:.1f};"
+               f"speedup_vs_unfused={dt_u/dt_f:.2f}", dims=dims)

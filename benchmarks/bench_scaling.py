@@ -39,8 +39,10 @@ print("PER_ITER_US", (time.time() - t0) / 10 * 1e6)
 
 
 def run(report):
-    # Figure 18: scale-up
-    for n_docs in (150, 300, 600):
+    # Figure 18: scale-up.  The 2400/4800-doc points (4-8x the seed sweep's
+    # max) exist because the fused zstats substep dropped the (N, K) arrays
+    # from the step's working set — see docs/performance.md.
+    for n_docs in (150, 300, 600, 2400, 4800):
         corpus = SyntheticCorpus(n_docs=n_docs, vocab=2000, n_topics=16,
                                  mean_len=120, seed=0).generate()
         m = models.make("lda", alpha=0.1, beta=0.05, K=16, V=2000)

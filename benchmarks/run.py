@@ -5,21 +5,24 @@
     bench_scaling    Figures 18-19 (scale-up / scale-out)
     bench_partition  Figure 20 + Tables 1-2 (partition strategies, analytic
                      + measured, replicated-memory anecdote)
-    bench_kernels    VMP hot-loop primitives
+    bench_kernels    VMP hot-loop primitives (fused zstats vs the unfused
+                     gather+zstep+segment_sum chain)
     bench_svi        streaming SVI vs full-batch VMP at 4x the largest
                      full-batch corpus (held-out ELBO target + working set)
 
 Prints ``name,us_per_call,derived`` CSV.  Select modules with
 ``python -m benchmarks.run [vmp|scaling|partition|kernels] ...``.
+
+``--json`` additionally writes one ``BENCH_<module>.json`` per selected
+module — ``{"module", "backend", "rows": [{"name", "us_per_call",
+"derived", ...}]}`` — the machine-readable perf trajectory CI uploads as an
+artifact so regressions are diffable across commits.
 """
 
 from __future__ import annotations
 
+import json
 import sys
-
-
-def _report(name: str, us_per_call: float, derived: str = "") -> None:
-    print(f"{name},{us_per_call:.2f},{derived}")
 
 
 def main() -> None:
@@ -28,10 +31,33 @@ def main() -> None:
     mods = {"vmp": bench_vmp, "scaling": bench_scaling,
             "partition": bench_partition, "kernels": bench_kernels,
             "svi": bench_svi}
-    picks = [a for a in sys.argv[1:] if a in mods] or list(mods)
+    args = sys.argv[1:]
+    json_mode = "--json" in args
+    picks = [a for a in args if a in mods] or list(mods)
+
+    try:
+        from repro.kernels.ops import _backend
+        backend = _backend()
+    except Exception:                 # pragma: no cover - kernels optional
+        backend = "unknown"
+
     print("name,us_per_call,derived")
     for p in picks:
-        mods[p].run(_report)
+        rows: list[dict] = []
+
+        def report(name: str, us_per_call: float, derived: str = "",
+                   **extra) -> None:
+            print(f"{name},{us_per_call:.2f},{derived}")
+            rows.append({"name": name, "us_per_call": round(us_per_call, 2),
+                         "derived": derived, **extra})
+
+        mods[p].run(report)
+        if json_mode:
+            path = f"BENCH_{p}.json"
+            with open(path, "w") as fh:
+                json.dump({"module": p, "backend": backend, "rows": rows},
+                          fh, indent=1)
+            print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

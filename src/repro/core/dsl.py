@@ -117,6 +117,7 @@ class Model:
         self._program = None
         self._state = None
         self._step_fn = None
+        self._step_dtype = None
         self._elbo_trace: list[float] = []
 
     def __getitem__(self, name: str) -> _RVHandle:
@@ -171,25 +172,36 @@ class Model:
         return self._program
 
     def infer(self, steps: int = 20, callback=None, checkpoint_every: int = 0,
-              checkpoint_dir: str | None = None, sharding=None, seed: int = 0):
+              checkpoint_dir: str | None = None, sharding=None, seed: int = 0,
+              elog_dtype=None):
         """Run VMP iterations (paper's ``infer`` API with callback, Fig 12).
 
         ``sharding`` is a :class:`repro.core.partition.ShardingPlan`; None
         runs single-device (everything on the default device).
+        ``elog_dtype`` (e.g. ``"bfloat16"``) narrows the Elog message tables
+        the token plate gathers from; accumulation stays f32.
         """
         from .runtime import run_inference
         prog = self.compile(sharding=sharding)
         step_fn = None
-        if sharding is not None and self._step_fn is None:
-            from .partition import make_distributed_step
-            self._step_fn, state0 = make_distributed_step(prog, sharding,
-                                                          seed=seed)
-            self._state = self._state or state0
+        if sharding is not None:
+            # the cached distributed step is dtype-specific: a different
+            # elog_dtype on a later infer() must rebuild it, not silently
+            # reuse the old trace
+            if self._step_fn is not None and self._step_dtype != elog_dtype:
+                self._step_fn = None
+            if self._step_fn is None:
+                from .partition import make_distributed_step
+                self._step_fn, state0 = make_distributed_step(
+                    prog, sharding, seed=seed, elog_dtype=elog_dtype)
+                self._step_dtype = elog_dtype
+                self._state = self._state or state0
         step_fn = self._step_fn
         self._state, trace = run_inference(
             prog, steps=steps, callback=callback,
             checkpoint_every=checkpoint_every, checkpoint_dir=checkpoint_dir,
-            state=self._state, step_fn=step_fn, seed=seed)
+            state=self._state, step_fn=step_fn, seed=seed,
+            elog_dtype=elog_dtype)
         self._elbo_trace.extend(trace)
         return self
 

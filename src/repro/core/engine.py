@@ -39,6 +39,8 @@ class EngineConfig:
     steps: int = 50
     seed: int = 0
     sharding: object = None         # ShardingPlan for vmp/svi; None = 1 device
+    elog_dtype: object = None       # e.g. "bfloat16": narrow Elog message
+                                    # tables in the token plate (f32 accum)
     # svi (see SVIConfig for semantics)
     batch_size: int = 64
     kappa: float = 0.7
@@ -103,7 +105,8 @@ class VMPEngine(InferenceEngine):
         # every backend fits fresh: a model inferred before must not
         # warm-start only the vmp path
         model.reset()
-        model.infer(steps=cfg.steps, sharding=cfg.sharding, seed=cfg.seed)
+        model.infer(steps=cfg.steps, sharding=cfg.sharding, seed=cfg.seed,
+                    elog_dtype=cfg.elog_dtype)
         posts = {n: np.asarray(model[n].get_result())
                  for n in model.net.rvs
                  if n in model.compile().dirichlets}
@@ -132,6 +135,7 @@ def _fit_svi(model, cfg: EngineConfig, full_batch: bool) -> InferenceResult:
         holdout_frac=cfg.holdout_frac, holdout_every=cfg.holdout_every,
         shuffle=not full_batch,
         rho=1.0 if full_batch else None,
+        elog_dtype=cfg.elog_dtype,
         seed=cfg.seed)
     svi = SVI(program, scfg, plan=cfg.sharding)
     state, history = svi.fit(steps=cfg.steps)

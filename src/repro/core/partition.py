@@ -202,13 +202,19 @@ def _tree_map_none(fn, d):
     return {k: (None if v is None else fn(v)) for k, v in d.items()}
 
 
-def make_distributed_step(program: VMPProgram, plan: ShardingPlan, seed: int = 0):
-    """Returns (step_fn, initial_state) for the chosen strategy."""
+def make_distributed_step(program: VMPProgram, plan: ShardingPlan, seed: int = 0,
+                          elog_dtype=None):
+    """Returns (step_fn, initial_state) for the chosen strategy.  The hot
+    loop runs the fused ``kops.zstats`` substep per shard; the psum of its
+    stats outputs (inside ``_step_body``) is the only collective."""
+    from .runtime import _resolve_elog_dtype
+    elog_dtype = _resolve_elog_dtype(elog_dtype)
     if plan.strategy == "replicated":
         from .runtime import make_step
-        return make_step(program), init_state(program, seed)
+        return make_step(program, elog_dtype=elog_dtype), \
+            init_state(program, seed)
     if plan.strategy == "gspmd":
-        return _make_gspmd_step(program, plan, seed)
+        return _make_gspmd_step(program, plan, seed, elog_dtype)
     if plan.strategy != "inferspark":
         raise ValueError(f"unknown strategy {plan.strategy!r}")
 
@@ -253,10 +259,10 @@ def make_distributed_step(program: VMPProgram, plan: ShardingPlan, seed: int = 0
         sq_posts = {n: (p[0] if n in layout.local_dirs else p)
                     for n, p in state.posteriors.items()}
         sq = VMPState(sq_posts, state.step)
-        new, elbo, _ = _step_body(layout.shadow, sq_arrays, sq,
-                                  axis_names=axes,
-                                  local_dirs=layout.local_dirs,
-                                  n_replicas=m)
+        new, elbo = _step_body(layout.shadow, sq_arrays, sq,
+                               axis_names=axes,
+                               local_dirs=layout.local_dirs,
+                               n_replicas=m, elog_dtype=elog_dtype)
         out_posts = {n: (p[None] if n in layout.local_dirs else p)
                      for n, p in new.posteriors.items()}
         return VMPState(out_posts, new.step), elbo
@@ -278,7 +284,8 @@ def make_distributed_step(program: VMPProgram, plan: ShardingPlan, seed: int = 0
     return step, state0
 
 
-def _make_gspmd_step(program: VMPProgram, plan: ShardingPlan, seed: int):
+def _make_gspmd_step(program: VMPProgram, plan: ShardingPlan, seed: int,
+                     elog_dtype=None):
     """Generic-partitioner baseline: flat arrays with sharding hints, XLA
     chooses the collectives (the 'GraphX built-in strategy' analogue)."""
     from .vmp import _program_arrays
@@ -321,8 +328,7 @@ def _make_gspmd_step(program: VMPProgram, plan: ShardingPlan, seed: int):
     shadow = dc.replace(program, latents=shadow_lats)
 
     def body(state, arrays):
-        new, elbo, _ = _step_body(shadow, arrays, state)
-        return new, elbo
+        return _step_body(shadow, arrays, state, elog_dtype=elog_dtype)
 
     state0 = init_state(program, seed)
     state0 = VMPState({n: jax.device_put(p, repl)

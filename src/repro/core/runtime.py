@@ -21,14 +21,25 @@ from .compiler import VMPProgram
 from .vmp import VMPState, _program_arrays, _step_body, init_state
 
 
-def make_step(program: VMPProgram, donate: bool = True):
+def make_step(program: VMPProgram, donate: bool = True, elog_dtype=None):
+    """``elog_dtype`` (e.g. ``jnp.bfloat16`` or ``"bfloat16"``) narrows the
+    Elog message tables the token plate reads — see ``_step_body``."""
     arrays = _program_arrays(program)
+    elog_dtype = _resolve_elog_dtype(elog_dtype)
 
     def step(state: VMPState):
-        new_state, elbo, _ = _step_body(program, arrays, state)
-        return new_state, elbo
+        return _step_body(program, arrays, state, elog_dtype=elog_dtype)
 
     return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def _resolve_elog_dtype(elog_dtype):
+    import jax.numpy as jnp
+    if elog_dtype is None or isinstance(elog_dtype, str) and \
+            elog_dtype in ("", "float32", "f32"):
+        return None
+    return getattr(jnp, elog_dtype) if isinstance(elog_dtype, str) \
+        else elog_dtype
 
 
 def run_inference(program: VMPProgram, steps: int = 20,
@@ -37,16 +48,18 @@ def run_inference(program: VMPProgram, steps: int = 20,
                   checkpoint_dir: Optional[str] = None,
                   state: Optional[VMPState] = None,
                   seed: int = 0,
-                  step_fn=None):
+                  step_fn=None,
+                  elog_dtype=None):
     """Run ``steps`` VMP iterations; returns (state, elbo_trace)."""
     if step_fn is None:
         if program.meta.get("sharding") is not None:
             from .partition import make_distributed_step
             step_fn, state0 = make_distributed_step(
-                program, program.meta["sharding"], seed=seed)
+                program, program.meta["sharding"], seed=seed,
+                elog_dtype=elog_dtype)
             state = state or state0
         else:
-            step_fn = make_step(program)
+            step_fn = make_step(program, elog_dtype=elog_dtype)
     if state is None:
         state = init_state(program, seed)
 

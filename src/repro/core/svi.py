@@ -50,6 +50,7 @@ class SVIConfig:
     tau: float = 10.0              # Robbins-Monro delay (down-weights early steps)
     local_iters: int = 1           # local coordinate-ascent passes per batch
     pad_multiple: int = 256        # pad sliced axes up to a multiple (0 = exact)
+    elog_dtype: object = None      # narrow Elog message tables (e.g. "bfloat16")
     holdout_frac: float = 0.0      # fraction of groups held out for ELBO eval
     holdout_every: int = 10        # evaluate held-out ELBO every k steps
     holdout_local_iters: int = 10  # local passes when evaluating held-out docs
@@ -81,7 +82,8 @@ def _priors(program: VMPProgram) -> dict[str, jnp.ndarray]:
 
 
 def make_svi_step(program: VMPProgram, caps: dict[str, int], plan=None,
-                  local_iters: int = 1, donate: bool = True):
+                  local_iters: int = 1, donate: bool = True,
+                  elog_dtype=None):
     """Build ``step(state, batch, rho, scale) -> (state', batch_elbo)``,
     jitted once per cap signature: every batch padded to the same ``caps``
     reuses the trace.
@@ -92,11 +94,13 @@ def make_svi_step(program: VMPProgram, caps: dict[str, int], plan=None,
     batch arrays carry a leading shard dim, global stats are psum'd by
     ``_step_body`` and local-row write-backs merge via a psum of deltas.
     """
+    from .runtime import _resolve_elog_dtype
     local = local_dirichlets(program)
     shadow = sliced_shadow(program, caps)
     priors = _priors(program)
     axes = plan.axes if plan is not None else ()
     n_replicas = plan.n_shards if plan is not None else 1
+    elog_dtype = _resolve_elog_dtype(elog_dtype)
 
     def body(state: VMPState, batch, rho, scale):
         # gather the batch's local rows; padding rows sit exactly at the
@@ -113,14 +117,14 @@ def make_svi_step(program: VMPProgram, caps: dict[str, int], plan=None,
 
         st = VMPState(sliced, state.step)
         for _ in range(max(local_iters - 1, 0)):     # local refinement only
-            ref, _, _ = _step_body(shadow, batch["arrays"], st,
-                                   axis_names=axes, local_dirs=local,
-                                   n_replicas=n_replicas)
+            ref, _ = _step_body(shadow, batch["arrays"], st,
+                                axis_names=axes, local_dirs=local,
+                                n_replicas=n_replicas, elog_dtype=elog_dtype)
             st = VMPState({n: (ref.posteriors[n] if n in local else sliced[n])
                            for n in sliced}, state.step)
-        new, elbo, _ = _step_body(shadow, batch["arrays"], st,
-                                  axis_names=axes, local_dirs=local,
-                                  n_replicas=n_replicas)
+        new, elbo = _step_body(shadow, batch["arrays"], st,
+                               axis_names=axes, local_dirs=local,
+                               n_replicas=n_replicas, elog_dtype=elog_dtype)
 
         posts = {}
         for name, d in program.dirichlets.items():
@@ -257,10 +261,10 @@ def _build_heldout_fn(program: VMPProgram, caps: dict[str, int],
                 posts[name] = posteriors[name]
         st = VMPState(posts, jnp.zeros((), jnp.int32))
         for _ in range(inner_iters):
-            new, _, _ = _step_body(shadow, arrays, st)
+            new, _ = _step_body(shadow, arrays, st)
             st = VMPState({n: (new.posteriors[n] if n in local
                                else posts[n]) for n in posts}, st.step)
-        _, elbo, _ = _step_body(shadow, arrays, st)
+        _, elbo = _step_body(shadow, arrays, st)
         for name, d in program.dirichlets.items():
             if name not in local:
                 elbo = elbo - dists.dirichlet_elbo_term(
@@ -363,7 +367,8 @@ class SVI:
         if sig not in self._steps:
             self._steps[sig] = make_svi_step(
                 self.program, caps, plan=self.plan,
-                local_iters=self.cfg.local_iters)
+                local_iters=self.cfg.local_iters,
+                elog_dtype=self.cfg.elog_dtype)
         rho = (self.cfg.rho if self.cfg.rho is not None
                else robbins_monro(t, self.cfg.tau, self.cfg.kappa))
         scale = len(self.train) / len(groups)

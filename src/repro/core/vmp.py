@@ -109,50 +109,48 @@ def _program_arrays(program: VMPProgram) -> dict:
 
 def _step_body(program: VMPProgram, arrays: dict, state: VMPState,
                axis_names: tuple = (), local_dirs: frozenset = frozenset(),
-               n_replicas: int = 1):
+               n_replicas: int = 1, elog_dtype=None):
     """One VMP iteration.  ``axis_names`` non-empty => running inside
     shard_map; stats of non-local Dirichlets are psum'd (the InferSpark
-    partitioning: replicate the small posteriors, keep big plates local)."""
+    partitioning: replicate the small posteriors, keep big plates local).
+
+    The token plate runs through the fused ``kops.zstats`` substep: per
+    latent, the Elog gathers, softmax/logsumexp, and sufficient-statistics
+    scatters happen in one streaming pass, so the (N, K) responsibilities
+    are never materialized (see docs/performance.md).  ``elog_dtype`` (e.g.
+    ``jnp.bfloat16``) optionally narrows the Elog *message tables* the token
+    plate gathers from — halving their HBM read traffic — while softmax,
+    stats accumulation, and the Dirichlet ELBO terms stay f32.
+    """
     from repro.kernels import ops as kops
 
     elog = {n: kops.dirichlet_expectation(p)
             for n, p in state.posteriors.items()}
+    emsg = elog if elog_dtype is None else \
+        {n: e.astype(elog_dtype) for n, e in elog.items()}
 
     elbo = jnp.zeros((), jnp.float32)
     stats = {n: jnp.zeros((d.g, d.k), jnp.float32)
              for n, d in program.dirichlets.items()}
-    resp = {}
 
     for spec in program.latents:
-        logits = _messages_to_latent(program, spec, elog, arrays)
-        r, lse = kops.zstep(logits)
-        zmask = arrays[spec.name].get("mask")
-        if zmask is not None:
-            r = r * zmask[:, None]
-            lse = lse * zmask
-        resp[spec.name] = r
-        elbo = elbo + lse.sum()
+        children = tuple(
+            kops.ZChild(elog=emsg[f.dir_name],
+                        values=arrays[f.x_name]["values"],
+                        stride=f.stride,
+                        zmap=arrays[f.x_name].get("zmap"),
+                        base=arrays[f.x_name].get("base"),
+                        mask=arrays[f.x_name].get("mask"))
+            for f in spec.children)
+        lse_sum, pstats, cstats = kops.zstats(
+            emsg[spec.prior_dir], arrays[spec.name]["prior_rows"], children,
+            zmask=arrays[spec.name].get("mask"))
+        elbo = elbo + lse_sum
         # prior-factor stats (theta <- z)
-        stats[spec.prior_dir] = stats[spec.prior_dir].at[
-            arrays[spec.name]["prior_rows"]].add(r)
+        stats[spec.prior_dir] = stats[spec.prior_dir] + pstats
         # child-factor stats (phi <- x weighted by r)
-        for f in spec.children:
-            a = arrays[f.x_name]
-            w = r if a.get("zmap") is None else r[a["zmap"]]
-            if a.get("mask") is not None:
-                w = w * a["mask"][:, None]
-            d = program.dirichlets[f.dir_name]
-            if f.specialized:
-                s = jax.ops.segment_sum(w, a["values"], num_segments=d.k).T
-                stats[f.dir_name] = stats[f.dir_name] + s
-            else:
-                kk = jnp.arange(spec.k, dtype=jnp.int32)
-                base = a["base"][:, None] if a.get("base") is not None else 0
-                rows = base + f.stride * kk[None, :]
-                flat = rows.astype(jnp.int32) * d.k + a["values"][:, None]
-                s = jax.ops.segment_sum(w.ravel(), flat.ravel(),
-                                        num_segments=d.g * d.k)
-                stats[f.dir_name] = stats[f.dir_name] + s.reshape(d.g, d.k)
+        for f, cs in zip(spec.children, cstats):
+            stats[f.dir_name] = stats[f.dir_name] + cs
 
     for s in program.statics:
         a = arrays[s.x_name]
@@ -185,14 +183,19 @@ def _step_body(program: VMPProgram, arrays: dict, state: VMPState,
 
     if axis_names:
         elbo = jax.lax.psum(elbo, axis_names)
-    return VMPState(new_posts, state.step + 1), elbo, resp
+    return VMPState(new_posts, state.step + 1), elbo
 
 
 def latent_responsibilities(program: VMPProgram, state: VMPState, name: str):
-    """Recompute q(z) for one latent from the current posteriors."""
+    """Recompute q(z) for one latent from the current posteriors.
+
+    The only path that still materializes explicit (N, K) responsibilities —
+    the step body streams them through ``kops.zstats`` without ever storing
+    them, so callers who want q(z) itself pay for it here, on demand.
+    """
     from repro.kernels import ops as kops
     arrays = _program_arrays(program)
-    elog = {n: dists.dirichlet_expectation(p)
+    elog = {n: kops.dirichlet_expectation(p)
             for n, p in state.posteriors.items()}
     for spec in program.latents:
         if spec.name == name:
@@ -205,5 +208,5 @@ def latent_responsibilities(program: VMPProgram, state: VMPState, name: str):
 def full_elbo(program: VMPProgram, state: VMPState) -> float:
     """ELBO at the current posteriors with optimal responsibilities."""
     arrays = _program_arrays(program)
-    _, elbo, _ = _step_body(program, arrays, state)
+    _, elbo = _step_body(program, arrays, state)
     return float(elbo)

@@ -49,7 +49,7 @@ def _kernel(alpha_ref, out_ref, *, pad_cols: int):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def dirichlet_expectation(alpha: jax.Array, *, interpret: bool = True) -> jax.Array:
+def dirichlet_expectation(alpha: jax.Array, *, interpret: bool = False) -> jax.Array:
     """Pallas-backed E[log theta]; matches ref.dirichlet_expectation."""
     if alpha.ndim != 2:
         raise ValueError("expected (rows, K)")

@@ -1,0 +1,237 @@
+"""Pallas TPU kernel: fused token-plate pipeline (gather -> softmax -> stats).
+
+One grid pass over token blocks computes, entirely in VMEM:
+
+    logits_i = elog_prior[prior_rows[i]] + sum_f message_f(i)   (gather)
+    r_i      = softmax(logits_i)                                 (z-substep)
+    lse_i    = logsumexp(logits_i)
+    prior_stats[prior_rows[i]] += r_i                            (scatter)
+    child_stats_f += r-weighted count scatter of factor f
+
+emitting only the per-block lse sums and the (G, K) stats accumulators.  The
+(N, K) responsibilities and logits never exist in HBM — they are block-local
+intermediates — which collapses the z-substep's ~4 full (N, K) HBM round
+trips (write logits, read logits, write r, re-read r per stats scatter) to
+the irreducible token-stream reads.  See docs/performance.md for the traffic
+model.
+
+Implementation notes:
+
+  - Gathers and scatters are expressed as one-hot matmuls so they run on the
+    MXU (TPU has no vector gather from VMEM); the one-hot lane dimension is
+    the table's row count, so every Elog table must be VMEM-resident.  The
+    dispatch layer (``ops.zstats``) falls back to the chunked ``ref`` oracle
+    when the tables exceed the VMEM budget or a child carries a ``zmap``
+    (segment latents need a cross-token reduction before the softmax).
+  - The stats outputs use a constant index map: sequential grid steps revisit
+    the same VMEM block, which is the canonical Pallas accumulator pattern
+    (initialized at program_id 0, flushed to HBM once at the end).
+  - Elog tables may arrive in bf16 (the engine's ``elog_dtype`` mode);
+    accumulation is always f32 (tables are upcast after the VMEM load).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ZChild
+
+_VMEM_BUDGET = 2 * 1024 * 1024        # bytes for the largest per-block tensor
+_TABLE_BUDGET = 8 * 1024 * 1024       # resident Elog tables + accumulators
+_LANE = 128
+_SUB = 8
+_NEG = -1e30
+
+
+def _pad_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _onehot(idx, width: int):
+    """(bn,) int32 -> (bn, width) f32 one-hot via 2-D iota (TPU-legal)."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], width), 1)
+    return (idx[:, None] == cols).astype(jnp.float32)
+
+
+def _kernel(*refs, k: int, meta: tuple):
+    """meta: per child (specialized, stride, has_base, has_mask)."""
+    ptab_ref, prow_ref, zm_ref = refs[0], refs[1], refs[2]
+    pos = 3
+    child_in = []
+    for (_, _, has_base, has_mask) in meta:
+        tab_ref, vals_ref = refs[pos], refs[pos + 1]
+        pos += 2
+        base_ref = mask_ref = None
+        if has_base:
+            base_ref = refs[pos]
+            pos += 1
+        if has_mask:
+            mask_ref = refs[pos]
+            pos += 1
+        child_in.append((tab_ref, vals_ref, base_ref, mask_ref))
+    lse_ref, pstats_ref = refs[pos], refs[pos + 1]
+    cstat_refs = refs[pos + 2:]
+
+    i = pl.program_id(0)
+    ptab = ptab_ref[...].astype(jnp.float32)          # (gpp, kp)
+    gpp, kp = ptab.shape
+    rows = prow_ref[...]
+    bn = rows.shape[0]
+    oh_p = _onehot(rows, gpp)                          # (bn, gpp)
+    logits = jnp.dot(oh_p, ptab, preferred_element_type=jnp.float32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bn, kp), 1)
+    logits = logits + jnp.where(lane < k, 0.0, _NEG)   # kill padded lanes
+
+    # gather phase: add every child factor's Elog message rows
+    for (tab_ref, vals_ref, base_ref, mask_ref), \
+            (specialized, stride, _, _) in zip(child_in, meta):
+        tab = tab_ref[...].astype(jnp.float32)         # (gfp, kfp)
+        vals = vals_ref[...]
+        oh_v = _onehot(vals, tab.shape[1])             # (bn, kfp)
+        if specialized:                                # row IS the topic
+            e = jnp.dot(oh_v, tab.T, preferred_element_type=jnp.float32)
+        else:                                          # row = base + stride*z
+            base = base_ref[...] if base_ref is not None \
+                else jnp.zeros_like(vals)
+            e = jnp.zeros((bn, kp), jnp.float32)
+            for kk in range(k):
+                oh_r = _onehot(base + stride * kk, tab.shape[0])
+                g = jnp.dot(oh_r, tab, preferred_element_type=jnp.float32)
+                e = e + jnp.where(lane == kk,
+                                  (g * oh_v).sum(-1)[:, None], 0.0)
+        if mask_ref is not None:
+            e = e * mask_ref[...][:, None]
+        logits = logits + e
+
+    # softmax + logsumexp, block-local; padded rows carry zmask 0
+    m = logits.max(axis=-1, keepdims=True)
+    ex = jnp.exp(logits - m)
+    s = ex.sum(axis=-1, keepdims=True)
+    zm = zm_ref[...]
+    r = ex / s * zm[:, None]
+    lse_ref[0] = jnp.sum((m[:, 0] + jnp.log(s[:, 0])) * zm)
+
+    @pl.when(i == 0)
+    def _init():
+        pstats_ref[...] = jnp.zeros(pstats_ref.shape, pstats_ref.dtype)
+        for cref in cstat_refs:
+            cref[...] = jnp.zeros(cref.shape, cref.dtype)
+
+    # scatter phase: one-hot-transposed matmuls into the accumulators
+    pstats_ref[...] += jnp.dot(oh_p.T, r, preferred_element_type=jnp.float32)
+    for (tab_ref, vals_ref, base_ref, mask_ref), cref, \
+            (specialized, stride, _, _) in zip(child_in, cstat_refs, meta):
+        vals = vals_ref[...]
+        oh_v = _onehot(vals, cref.shape[1])
+        w = r if mask_ref is None else r * mask_ref[...][:, None]
+        if specialized:
+            cref[...] += jnp.dot(w.T, oh_v,
+                                 preferred_element_type=jnp.float32)
+        else:
+            base = base_ref[...] if base_ref is not None \
+                else jnp.zeros_like(vals)
+            acc = jnp.zeros(cref.shape, jnp.float32)
+            for kk in range(k):
+                oh_r = _onehot(base + stride * kk, cref.shape[0])
+                acc = acc + jnp.dot(oh_r.T, oh_v * w[:, kk:kk + 1],
+                                    preferred_element_type=jnp.float32)
+            cref[...] += acc
+
+
+def fusable(elog_prior, children) -> bool:
+    """True when the fused kernel supports this latent: no segment (zmap)
+    children and all Elog tables + accumulators VMEM-resident."""
+    if any(c.zmap is not None for c in children):
+        return False
+    k = elog_prior.shape[1]
+    kp = _pad_to(max(k, 1), _LANE)
+    byt = 2 * 4 * _pad_to(elog_prior.shape[0], _LANE) * kp
+    for c in children:
+        gf, kf = c.elog.shape
+        gfp = kp if c.specialized else _pad_to(gf, _LANE)
+        byt += 2 * 4 * gfp * _pad_to(kf, _LANE)
+    return byt <= _TABLE_BUDGET
+
+
+def zstats(elog_prior: jax.Array, prior_rows: jax.Array, children: tuple,
+           zmask=None, *, block_n: int | None = None,
+           interpret: bool = False):
+    """Pallas-backed fused z-substep; matches ``ref.zstats`` (flat case)."""
+    if any(c.zmap is not None for c in children):
+        raise ValueError("segment latents (zmap) are not fusable; "
+                         "use ref.zstats")
+    n = prior_rows.shape[0]
+    gp, k = elog_prior.shape
+    kp = _pad_to(max(k, 1), _LANE)
+    gpp = _pad_to(max(gp, 1), _LANE)
+
+    meta, tabs, tab_dims = [], [], []
+    for c in children:
+        gf, kf = c.elog.shape
+        specialized = c.specialized
+        if specialized and gf != k:
+            raise ValueError(f"specialized child table has {gf} rows, "
+                             f"expected K={k}")
+        gfp = kp if specialized else _pad_to(max(gf, 1), _LANE)
+        kfp = _pad_to(max(kf, 1), _LANE)
+        tabs.append(jnp.pad(c.elog, ((0, gfp - gf), (0, kfp - kf))))
+        tab_dims.append((gf, kf, gfp, kfp))
+        meta.append((specialized, int(c.stride),
+                     c.base is not None, c.mask is not None))
+    meta = tuple(meta)
+
+    maxdim = max([gpp, kp] + [max(g, kf) for (_, _, g, kf) in tab_dims])
+    bn = block_n or max(_SUB, min(512, _VMEM_BUDGET // (4 * maxdim)
+                                  // _SUB * _SUB))
+    np_ = _pad_to(max(n, 1), bn)
+    nblocks = np_ // bn
+
+    def ptok(a, fill=0):
+        return jnp.pad(a, (0, np_ - n), constant_values=fill)
+
+    zm = jnp.ones((n,), jnp.float32) if zmask is None \
+        else zmask.astype(jnp.float32)
+    inputs = [jnp.pad(elog_prior, ((0, gpp - gp), (0, kp - k))),
+              ptok(prior_rows.astype(jnp.int32)), ptok(zm, 0.0)]
+    tok_spec = pl.BlockSpec((bn,), lambda i: (i,))
+    in_specs = [pl.BlockSpec((gpp, kp), lambda i: (0, 0)), tok_spec, tok_spec]
+    for c, tab, (_, _, gfp, kfp) in zip(children, tabs, tab_dims):
+        inputs.append(tab)
+        in_specs.append(pl.BlockSpec((gfp, kfp), lambda i: (0, 0)))
+        inputs.append(ptok(c.values.astype(jnp.int32)))
+        in_specs.append(tok_spec)
+        if c.base is not None:
+            inputs.append(ptok(c.base.astype(jnp.int32)))
+            in_specs.append(tok_spec)
+        if c.mask is not None:
+            inputs.append(ptok(c.mask.astype(jnp.float32), 0.0))
+            in_specs.append(tok_spec)
+
+    out_shape = [jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+                 jax.ShapeDtypeStruct((gpp, kp), jnp.float32)]
+    out_specs = [pl.BlockSpec((1,), lambda i: (i,)),
+                 pl.BlockSpec((gpp, kp), lambda i: (0, 0))]
+    for (_, _, gfp, kfp) in tab_dims:
+        out_shape.append(jax.ShapeDtypeStruct((gfp, kfp), jnp.float32))
+        out_specs.append(pl.BlockSpec((gfp, kfp), lambda i: (0, 0)))
+
+    outs = pl.pallas_call(
+        functools.partial(_kernel, k=k, meta=meta),
+        grid=(nblocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)
+
+    lse_blocks, pstats = outs[0], outs[1]
+    cstats = tuple(cs[:gf, :kf]
+                   for cs, (gf, kf, _, _) in zip(outs[2:], tab_dims))
+    return lse_blocks.sum(), pstats[:gp, :k], cstats
+
+
+__all__ = ["ZChild", "zstats", "fusable"]

@@ -14,6 +14,7 @@ import jax
 
 from . import ref
 from .dirichlet_expectation import dirichlet_expectation as _de_pallas
+from .ref import ZChild
 from .vmp_zstep import zstep as _zstep_pallas
 
 
@@ -42,6 +43,26 @@ def zstep(logits: jax.Array):
     return _zstep_pallas(logits, interpret=(b == "pallas_interpret"))
 
 
+def zstats(elog_prior: jax.Array, prior_rows: jax.Array, children: tuple,
+           zmask=None):
+    """Fused token-plate substep: ``(lse_sum, prior_stats, child_stats)``.
+
+    The hot path of every VMP/SVI iteration (see ``core/vmp.py:_step_body``).
+    On TPU the fused Pallas kernel keeps responsibilities out of HBM; segment
+    latents (a child with a ``zmap``) and models whose Elog tables exceed the
+    kernel's VMEM budget take the chunked ``ref`` oracle, which streams token
+    chunks through a ``lax.scan`` and so also never materializes the
+    (N_token, K) working set.
+    """
+    b = _backend()
+    if b != "ref":
+        from .fused_zstats import fusable, zstats as _zstats_pallas
+        if fusable(elog_prior, children):
+            return _zstats_pallas(elog_prior, prior_rows, children, zmask,
+                                  interpret=(b == "pallas_interpret"))
+    return ref.zstats(elog_prior, prior_rows, children, zmask)
+
+
 def flash_attention(q, k, v, *, causal: bool = True):
     from .flash_attention import flash_attention as _fa_pallas
     b = _backend()
@@ -49,3 +70,7 @@ def flash_attention(q, k, v, *, causal: bool = True):
         return ref.flash_attention(q, k, v, causal=causal)
     return _fa_pallas(q, k, v, causal=causal,
                       interpret=(b == "pallas_interpret"))
+
+
+__all__ = ["ZChild", "dirichlet_expectation", "zstep", "zstats",
+           "flash_attention"]

@@ -7,6 +7,8 @@ fallback on non-TPU backends.
 
 from __future__ import annotations
 
+from typing import NamedTuple, Optional
+
 import jax
 import jax.numpy as jnp
 from jax.scipy.special import digamma
@@ -43,3 +45,228 @@ def zstep(logits: jax.Array) -> tuple[jax.Array, jax.Array]:
     e = jnp.exp(logits - m)
     s = e.sum(axis=-1, keepdims=True)
     return e / s, (m + jnp.log(s))[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# fused token-plate substep: gather -> softmax -> sufficient statistics
+# ---------------------------------------------------------------------------
+
+class ZChild(NamedTuple):
+    """Kernel-level view of one observed child factor of a latent selector.
+
+    The parent Dirichlet row of token ``i`` under topic ``k`` is
+    ``base[i] + stride * k`` (``base is None`` means all-zero; ``base is None
+    and stride == 1`` is the specialized LDA fast path where the row IS the
+    selector value).  ``zmap`` maps tokens to latent instances when the token
+    plate is nested below the latent plate (SLDA); ``None`` means identity.
+    """
+    elog: jax.Array                    # (G_f, K_f) parent Elog table
+    values: jax.Array                  # (Nt,) observed category per token
+    stride: int = 1
+    zmap: Optional[jax.Array] = None   # (Nt,) token -> latent instance
+    base: Optional[jax.Array] = None   # (Nt,) static row base
+    mask: Optional[jax.Array] = None   # (Nt,) 1.0/0.0 token validity
+
+    @property
+    def specialized(self) -> bool:
+        """LDA fast path: the Dirichlet row IS the selector value (mirrors
+        ``compiler.ChildFactor.specialized``)."""
+        return self.base is None and self.stride == 1
+
+
+ZSTATS_CHUNK = 32768                   # token rows per lax.scan chunk
+
+
+def _child_messages(child: ZChild, vals, base, mask, k: int) -> jax.Array:
+    """Per-token Elog message rows of one child factor -> (n, k) f32."""
+    if child.specialized:
+        e = child.elog[:, vals].T
+    else:
+        kk = jnp.arange(k, dtype=jnp.int32)
+        b = base[:, None] if base is not None else 0
+        rows = b + child.stride * kk[None, :]
+        e = child.elog[rows, vals[:, None]]
+    e = e.astype(jnp.float32)
+    if mask is not None:
+        e = e * mask[:, None]
+    return e
+
+
+def _child_stats_native(child: ZChild, acc, w, vals, base, mask,
+                        k: int) -> jax.Array:
+    """Accumulate one chunk's responsibility-weighted counts into ``acc``.
+
+    Specialized children accumulate in the scatter-native (K_f, G_f) layout
+    — i.e. (V, K) for LDA — so the per-chunk hot loop is a pure scatter-add;
+    the single transpose to the Dirichlet's (G_f, K_f) layout happens once,
+    in :func:`_child_stats_finish`, not once per chunk.
+    """
+    if mask is not None:
+        w = w * mask[:, None]
+    gf, kf = child.elog.shape
+    if child.specialized:
+        return acc.at[vals].add(w)                      # (kf, gf) native
+    kk = jnp.arange(k, dtype=jnp.int32)
+    b = base[:, None] if base is not None else 0
+    rows = (b + child.stride * kk[None, :]).astype(jnp.int32)
+    flat = rows * kf + vals[:, None]
+    s = jax.ops.segment_sum(w.ravel(), flat.ravel(), num_segments=gf * kf)
+    return acc + s.reshape(gf, kf)
+
+
+def _child_stats_init(child: ZChild) -> jax.Array:
+    gf, kf = child.elog.shape
+    if child.specialized:
+        return jnp.zeros((kf, gf), jnp.float32)
+    return jnp.zeros((gf, kf), jnp.float32)
+
+
+def _child_stats_finish(child: ZChild, acc: jax.Array) -> jax.Array:
+    if child.specialized:
+        return acc.T
+    return acc
+
+
+def _scan_chunks(xs: dict, n: int, chunk: int, init, body):
+    """Fold ``body(carry, xs_chunk)`` over ``chunk``-sized row slices of every
+    array in ``xs``.  Single-chunk inputs run ``body`` directly (no scan) so
+    small problems keep the exact summation order of the unfused path; larger
+    ones scan the full chunks and fold the remainder rows with one direct
+    tail call — no padding, no synthetic masks, every row is real."""
+    if n <= chunk:
+        return body(init, xs)
+    nc = n // chunk
+    head = {name: a[:nc * chunk].reshape((nc, chunk) + a.shape[1:])
+            for name, a in xs.items()}
+    carry, _ = jax.lax.scan(lambda c, x: (body(c, x), None), init, head)
+    if n > nc * chunk:
+        carry = body(carry, {name: a[nc * chunk:] for name, a in xs.items()})
+    return carry
+
+
+def _token_xs(child: ZChild, i: int) -> dict:
+    xs = {f"values{i}": child.values}
+    if child.zmap is not None:
+        xs[f"zmap{i}"] = child.zmap
+    if child.base is not None:
+        xs[f"base{i}"] = child.base
+    if child.mask is not None:
+        xs[f"mask{i}"] = child.mask
+    return xs
+
+
+def zstats(elog_prior: jax.Array, prior_rows: jax.Array,
+           children: tuple, zmask: Optional[jax.Array] = None,
+           chunk: int = ZSTATS_CHUNK):
+    """Fused z-substep semantics: one streaming pass over the token plate.
+
+    Computes, without ever materializing the (N, K) responsibilities or
+    logits (they live one chunk at a time):
+
+        logits_i = elog_prior[prior_rows[i]] + sum_f message_f(i)
+        r_i, lse_i = softmax/logsumexp(logits_i)          (masked by zmask)
+        lse_sum = sum_i lse_i
+        prior_stats[prior_rows[i]] += r_i
+        child_stats_f = responsibility-weighted count scatter of factor f
+
+    Returns ``(lse_sum, prior_stats, child_stats_tuple)`` — exactly the
+    quantities ``core/vmp.py:_step_body`` needs; responsibilities are
+    intermediate values, never state.
+
+    Latents whose children carry a ``zmap`` (segment latents, e.g. SLDA
+    sentences) need a cross-token reduction before the softmax, so they
+    materialize the (n_latent, K) logits — still dropping the (N_token, K)
+    working set, which is the large one.
+    """
+    k = elog_prior.shape[1]
+    if any(c.zmap is not None for c in children):
+        return _zstats_segmented(elog_prior, prior_rows, children, zmask,
+                                 chunk, k)
+    return _zstats_flat(elog_prior, prior_rows, children, zmask, chunk, k)
+
+
+def _zstats_flat(elog_prior, prior_rows, children, zmask, chunk, k):
+    """Token plate == latent plate: a single fused scan, nothing (N, K)."""
+    n = prior_rows.shape[0]
+    gp = elog_prior.shape[0]
+
+    def body(carry, xs):
+        lse_acc, pstats, cstats = carry
+        rows = xs["prior_rows"]
+        zm = xs.get("zmask")
+        logits = elog_prior[rows].astype(jnp.float32)
+        for i, c in enumerate(children):
+            logits = logits + _child_messages(
+                c, xs[f"values{i}"], xs.get(f"base{i}"), xs.get(f"mask{i}"), k)
+        r, lse = zstep(logits)
+        if zm is not None:
+            r = r * zm[:, None]
+            lse = lse * zm
+        lse_acc = lse_acc + lse.sum()
+        pstats = pstats.at[rows].add(r)
+        cstats = tuple(
+            _child_stats_native(c, cs, r, xs[f"values{i}"],
+                                xs.get(f"base{i}"), xs.get(f"mask{i}"), k)
+            for i, (c, cs) in enumerate(zip(children, cstats)))
+        return lse_acc, pstats, cstats
+
+    xs = {"prior_rows": prior_rows}
+    if zmask is not None:
+        xs["zmask"] = zmask
+    for i, c in enumerate(children):
+        xs.update(_token_xs(c, i))
+    init = (jnp.zeros((), jnp.float32),
+            jnp.zeros((gp, k), jnp.float32),
+            tuple(_child_stats_init(c) for c in children))
+    lse_sum, pstats, cstats = _scan_chunks(xs, n, chunk, init, body)
+    return lse_sum, pstats, tuple(_child_stats_finish(c, cs)
+                                  for c, cs in zip(children, cstats))
+
+
+def _zstats_segmented(elog_prior, prior_rows, children, zmask, chunk, k):
+    """Segment latents: accumulate per-instance logits (cross-token
+    reduction), then stream the child token plates against them."""
+    nz = prior_rows.shape[0]
+    gp = elog_prior.shape[0]
+    logits = elog_prior[prior_rows].astype(jnp.float32)
+
+    for i, c in enumerate(children):
+        if c.zmap is None:
+            logits = logits + _child_messages(c, c.values, c.base, c.mask, k)
+            continue
+
+        def msg_body(acc, xs, c=c, i=i):
+            e = _child_messages(c, xs[f"values{i}"], xs.get(f"base{i}"),
+                                xs.get(f"mask{i}"), k)
+            return acc + jax.ops.segment_sum(e, xs[f"zmap{i}"],
+                                             num_segments=nz)
+
+        logits = logits + _scan_chunks(
+            _token_xs(c, i), c.values.shape[0], chunk,
+            jnp.zeros((nz, k), jnp.float32), msg_body)
+
+    r, lse = zstep(logits)
+    if zmask is not None:
+        r = r * zmask[:, None]
+        lse = lse * zmask
+    lse_sum = lse.sum()
+    pstats = jnp.zeros((gp, k), jnp.float32).at[prior_rows].add(r)
+
+    cstats = []
+    for i, c in enumerate(children):
+        if c.zmap is None:
+            s = _child_stats_native(c, _child_stats_init(c), r, c.values,
+                                    c.base, c.mask, k)
+            cstats.append(_child_stats_finish(c, s))
+            continue
+
+        def st_body(cs, xs, c=c, i=i):
+            w = r[xs[f"zmap{i}"]]
+            return _child_stats_native(c, cs, w, xs[f"values{i}"],
+                                       xs.get(f"base{i}"),
+                                       xs.get(f"mask{i}"), k)
+
+        s = _scan_chunks(_token_xs(c, i), c.values.shape[0], chunk,
+                         _child_stats_init(c), st_body)
+        cstats.append(_child_stats_finish(c, s))
+    return lse_sum, pstats, tuple(cstats)

@@ -37,7 +37,7 @@ def _kernel(logits_ref, r_ref, lse_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def zstep(logits: jax.Array, *, interpret: bool = True):
+def zstep(logits: jax.Array, *, interpret: bool = False):
     """Pallas-backed (softmax, logsumexp); matches ref.zstep."""
     if logits.ndim != 2:
         raise ValueError("expected (N, K)")

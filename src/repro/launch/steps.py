@@ -54,14 +54,17 @@ def build_infer_step(program, engine="vmp"):
         if engine.sharding is not None:
             from repro.core.partition import make_distributed_step
             return make_distributed_step(program, engine.sharding,
-                                         seed=engine.seed)
-        return make_step(program), init_state(program, engine.seed)
+                                         seed=engine.seed,
+                                         elog_dtype=engine.elog_dtype)
+        return make_step(program, elog_dtype=engine.elog_dtype), \
+            init_state(program, engine.seed)
     if engine.backend == "svi":
         svi = SVI(program, SVIConfig(
             batch_size=engine.batch_size, kappa=engine.kappa, tau=engine.tau,
             local_iters=engine.local_iters, pad_multiple=engine.pad_multiple,
             holdout_frac=engine.holdout_frac,
-            holdout_every=engine.holdout_every, seed=engine.seed),
+            holdout_every=engine.holdout_every, seed=engine.seed,
+            elog_dtype=engine.elog_dtype),
             plan=engine.sharding)
 
         def step_fn(state):

@@ -24,6 +24,20 @@ def test_gibbs_rejects_non_lda_shapes(small_corpus):
         make_engine("gibbs", steps=5).fit(m)
 
 
+def test_bf16_elog_mode_tracks_f32(lda_model):
+    """elog_dtype="bfloat16" narrows only the gathered message tables; the
+    fit must land within bf16 noise of the f32 run, on both engines."""
+    for backend in ("vmp", "svi"):
+        r32 = make_engine(backend, steps=8, batch_size=16,
+                          seed=0).fit(lda_model)
+        r16 = make_engine(backend, steps=8, batch_size=16, seed=0,
+                          elog_dtype="bfloat16").fit(lda_model)
+        e32, e16 = r32.elbo_trace[-1], r16.elbo_trace[-1]
+        assert abs(e16 - e32) / abs(e32) < 1e-2, (backend, e32, e16)
+        tv = aligned_tv(r32.topics("phi"), r16.topics("phi"))
+        assert tv < 0.05, (backend, tv)
+
+
 def test_all_backends_run_and_expose_topics(lda_model):
     for backend, steps in (("vmp", 5), ("svi", 8), ("gibbs", 20)):
         r = make_engine(backend, steps=steps, batch_size=16).fit(lda_model)

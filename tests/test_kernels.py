@@ -51,6 +51,167 @@ def test_flash_attention_allclose(bh, s, dh, bq, bk):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# fused zstats: Pallas kernel + chunked oracle vs a dense legacy reference
+# ---------------------------------------------------------------------------
+
+def _dense_zstats(elog_prior, prior_rows, children, zmask=None):
+    """The pre-fusion step-body semantics, materialized densely: the
+    independent reference both the chunked oracle and the kernel must match."""
+    import jax
+    k = elog_prior.shape[1]
+    logits = elog_prior[prior_rows].astype(jnp.float32)
+    for c in children:
+        if c.base is None and c.stride == 1:
+            e = c.elog[:, c.values].T
+        else:
+            kk = jnp.arange(k, dtype=jnp.int32)
+            b = c.base[:, None] if c.base is not None else 0
+            e = c.elog[b + c.stride * kk[None, :], c.values[:, None]]
+        e = e.astype(jnp.float32)
+        if c.mask is not None:
+            e = e * c.mask[:, None]
+        if c.zmap is not None:
+            e = jax.ops.segment_sum(e, c.zmap,
+                                    num_segments=prior_rows.shape[0])
+        logits = logits + e
+    r, lse = ref.zstep(logits)
+    if zmask is not None:
+        r = r * zmask[:, None]
+        lse = lse * zmask
+    pstats = jnp.zeros(elog_prior.shape, jnp.float32).at[prior_rows].add(r)
+    cstats = []
+    for c in children:
+        w = r if c.zmap is None else r[c.zmap]
+        if c.mask is not None:
+            w = w * c.mask[:, None]
+        gf, kf = c.elog.shape
+        if c.base is None and c.stride == 1:
+            cstats.append(jax.ops.segment_sum(w, c.values,
+                                              num_segments=kf).T)
+        else:
+            kk = jnp.arange(k, dtype=jnp.int32)
+            b = c.base[:, None] if c.base is not None else 0
+            rows = (b + c.stride * kk[None, :]).astype(jnp.int32)
+            s = jax.ops.segment_sum(w.ravel(),
+                                    (rows * kf + c.values[:, None]).ravel(),
+                                    num_segments=gf * kf)
+            cstats.append(s.reshape(gf, kf))
+    return lse.sum(), pstats, tuple(cstats)
+
+
+def _zcase(seed, n, k, gp, cfgs, zmask=False, nz=None):
+    """Build (elog_prior, prior_rows, children, zmask) from a case spec."""
+    rng = np.random.default_rng(seed)
+    nz = nz or n
+    et = jnp.asarray(rng.normal(size=(gp, k)).astype(np.float32))
+    rows = jnp.asarray(rng.integers(0, gp, nz).astype(np.int32))
+    children = []
+    for (gf, kf, stride, has_base, has_mask, has_zmap) in cfgs:
+        nt = n if has_zmap else nz
+        vals = jnp.asarray(rng.integers(0, kf, nt).astype(np.int32))
+        base = None
+        if has_base:
+            hi = max(gf - stride * (k - 1), 1)
+            base = jnp.asarray(rng.integers(0, hi, nt).astype(np.int32))
+        mask = jnp.asarray((rng.random(nt) > 0.25).astype(np.float32)) \
+            if has_mask else None
+        zmap = jnp.asarray(np.sort(rng.integers(0, nz, nt)).astype(np.int32)) \
+            if has_zmap else None
+        tab = jnp.asarray(rng.normal(size=(gf, kf)).astype(np.float32))
+        children.append(ref.ZChild(tab, vals, stride, zmap, base, mask))
+    zm = jnp.asarray((rng.random(nz) > 0.15).astype(np.float32)) \
+        if zmask else None
+    return et, rows, tuple(children), zm
+
+
+# (n, k, gp, [(gf, kf, stride, base?, mask?, zmap?)...], zmask, nz)
+ZSTATS_CASES = [
+    # LDA fast path, several shapes incl. K > 128 (lane boundary)
+    (64, 3, 5, [(3, 17, 1, False, False, False)], False, None),
+    (300, 4, 20, [(4, 33, 1, False, False, False)], False, None),
+    (129, 130, 7, [(130, 5, 1, False, False, False)], False, None),
+    # masked tokens (the sliced-program path)
+    (200, 4, 12, [(4, 21, 1, False, True, False)], True, None),
+    # strided child factors (DCMLDA-shaped: row = base + stride*z)
+    (150, 3, 9, [(30, 11, 3, True, False, False)], False, None),
+    (150, 3, 9, [(30, 11, 3, True, True, False)], True, None),
+    # stride-1 with base (general path even though stride == 1)
+    (100, 5, 8, [(5, 12, 1, True, False, False)], False, None),
+    # multiple children of one latent
+    (120, 3, 6, [(3, 19, 1, False, False, False),
+                 (21, 9, 7, True, True, False)], True, None),
+    # segment latents (SLDA-shaped zmap): routed to the chunked oracle
+    (240, 3, 10, [(3, 15, 1, False, False, True)], False, 40),
+    (240, 3, 10, [(3, 15, 1, False, True, True)], True, 40),
+]
+
+
+@pytest.mark.parametrize("case", range(len(ZSTATS_CASES)))
+def test_zstats_ref_matches_dense(case):
+    n, k, gp, cfgs, zm, nz = ZSTATS_CASES[case]
+    et, rows, children, zmask = _zcase(case, n, k, gp, cfgs, zm, nz)
+    want = _dense_zstats(et, rows, children, zmask)
+    got = ref.zstats(et, rows, children, zmask, chunk=49)  # force chunking
+    np.testing.assert_allclose(float(got[0]), float(want[0]),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-5, atol=1e-5)
+    for g, w in zip(got[2], want[2]):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("case", range(len(ZSTATS_CASES)))
+def test_zstats_forced_pallas_parity(case, monkeypatch):
+    """ops.zstats under REPRO_FORCE_PALLAS=1 (interpret-mode kernel for
+    flat latents, chunked-oracle routing for segment latents) matches the
+    ref oracle across shapes, masks, zmap, and child-factor layouts."""
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    n, k, gp, cfgs, zm, nz = ZSTATS_CASES[case]
+    et, rows, children, zmask = _zcase(case, n, k, gp, cfgs, zm, nz)
+    want = ref.zstats(et, rows, children, zmask)
+    got = ops.zstats(et, rows, children, zmask)
+    np.testing.assert_allclose(float(got[0]), float(want[0]),
+                               rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(got[1], want[1], rtol=2e-4, atol=2e-5)
+    for g, w in zip(got[2], want[2]):
+        np.testing.assert_allclose(g, w, rtol=2e-4, atol=2e-5)
+
+
+def test_zstats_kernel_used_on_flat_latents(monkeypatch):
+    """The flat (token-plate) case must actually route through the fused
+    Pallas kernel under force-pallas, not silently fall back."""
+    import repro.kernels.fused_zstats as fz
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    et, rows, children, zmask = _zcase(0, 64, 3, 5,
+                                       [(3, 17, 1, False, False, False)])
+    calls = []
+    orig = fz.zstats
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(fz, "zstats", spy)
+    ops.zstats(et, rows, children, zmask)
+    assert calls, "flat latent did not reach the fused Pallas kernel"
+
+
+def test_zstats_bf16_tables_f32_accum():
+    """bf16 Elog tables (the engine's elog_dtype mode): the oracle upcasts
+    and accumulates in f32, staying close to the f32 result."""
+    et, rows, children, _ = _zcase(1, 300, 4, 20,
+                                   [(4, 33, 1, False, False, False)])
+    want = ref.zstats(et, rows, children)
+    got = ref.zstats(et.astype(jnp.bfloat16), rows,
+                     (children[0]._replace(
+                         elog=children[0].elog.astype(jnp.bfloat16)),))
+    assert got[1].dtype == jnp.float32
+    np.testing.assert_allclose(float(got[0]), float(want[0]), rtol=2e-2)
+    np.testing.assert_allclose(got[1], want[1], rtol=5e-2, atol=5e-2)
+
+
 def test_ops_dispatch_cpu_uses_ref(monkeypatch):
     from repro.kernels import ops
     monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)

@@ -35,6 +35,59 @@ def test_elbo_monotone_random_lda(seed, k, v, d):
     assert (diffs >= -1e-5 * scale).all(), diffs
 
 
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 4),
+       v=st.integers(5, 25), d=st.integers(2, 8))
+def test_elbo_monotone_fused_pallas_path(seed, k, v, d):
+    """The CAVI monotonicity guarantee must survive the fused zstats
+    kernel path (REPRO_FORCE_PALLAS=1 routes the step body through the
+    Pallas kernel in interpret mode)."""
+    import os
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(20, 80))
+    toks = rng.integers(0, v, n).astype(np.int32)
+    docs = np.sort(rng.integers(0, d, n)).astype(np.int32)
+    m = models.make("lda", alpha=0.3, beta=0.3, K=k, V=v)
+    m["x"].observe(toks, segment_ids=docs)
+    old = os.environ.get("REPRO_FORCE_PALLAS")
+    os.environ["REPRO_FORCE_PALLAS"] = "1"
+    try:
+        m.infer(steps=4, seed=seed % 5)
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_FORCE_PALLAS", None)
+        else:
+            os.environ["REPRO_FORCE_PALLAS"] = old
+    diffs = np.diff(m.elbo_trace)
+    scale = max(abs(m.elbo_trace[0]), 1.0)
+    assert (diffs >= -1e-5 * scale).all(), diffs
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(2, 400),
+       k=st.integers(2, 6), chunk=st.integers(1, 64))
+def test_zstats_chunk_invariance(seed, n, k, chunk):
+    """zstats results are invariant (up to float tolerance) to the chunk
+    size of the streaming scan — chunking is an implementation detail."""
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    rng = np.random.default_rng(seed)
+    d, v = int(rng.integers(1, 20)), int(rng.integers(2, 30))
+    et = jnp.asarray(rng.normal(size=(d, k)).astype(np.float32))
+    ep = jnp.asarray(rng.normal(size=(k, v)).astype(np.float32))
+    rows = jnp.asarray(rng.integers(0, d, n).astype(np.int32))
+    vals = jnp.asarray(rng.integers(0, v, n).astype(np.int32))
+    ch = (ref.ZChild(ep, vals, 1),)
+    one = ref.zstats(et, rows, ch, chunk=10**9)
+    many = ref.zstats(et, rows, ch, chunk=chunk)
+    np.testing.assert_allclose(float(one[0]), float(many[0]),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(one[1], many[1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(one[2][0], many[2][0], rtol=1e-4, atol=1e-5)
+    # stats conservation: total responsibility mass == unmasked token count
+    np.testing.assert_allclose(float(many[1].sum()), n, rtol=1e-4)
+
+
 @settings(max_examples=50, deadline=None)
 @given(seed=st.integers(0, 10_000), m=st.integers(1, 32),
        n=st.integers(1, 500))

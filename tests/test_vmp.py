@@ -75,6 +75,49 @@ def test_lda_matches_handwritten_cavi():
     np.testing.assert_allclose(got, ref, rtol=2e-4)
 
 
+# ELBO traces captured from the pre-fusion step body (gather -> zstep ->
+# segment_sum, commit 9c7e323) on fixed seeds: the fused zstats
+# restructuring must reproduce them.  On the single-chunk path the stats
+# scatters are the same primitives in the same order, so the match is
+# bitwise; the assertion allows float32 headroom for future re-chunking.
+_GOLD_LDA = [-13043.072265625, -7396.16015625, -7368.0078125,
+             -7311.3955078125, -7188.77294921875, -6974.115234375,
+             -6709.36083984375, -6444.1083984375, -6165.09423828125,
+             -5877.9853515625]
+_GOLD_SLDA = [-1678.169189453125, -1518.405029296875, -1505.90576171875,
+              -1495.37353515625, -1487.3486328125, -1481.5548095703125,
+              -1478.287353515625, -1476.63134765625]
+
+
+def test_fused_step_reproduces_prefusion_elbo_trace():
+    """Fixed-seed full-batch VMP through the fused token-plate substep:
+    the ELBO trace is unchanged from the pre-refactor engine and monotone."""
+    from repro.data import SyntheticCorpus
+    c = SyntheticCorpus(n_docs=50, vocab=30, n_topics=3, mean_len=60,
+                        seed=0).generate()
+    m = models.make("lda", alpha=0.1, beta=0.05, K=3, V=30)
+    m["x"].observe(c["tokens"], segment_ids=c["doc_ids"])
+    m.infer(steps=10, seed=0)
+    np.testing.assert_allclose(m.elbo_trace, _GOLD_LDA, rtol=1e-6)
+    scale = abs(_GOLD_LDA[0])
+    assert (np.diff(m.elbo_trace) >= -1e-6 * scale).all()
+
+
+def test_fused_step_reproduces_prefusion_elbo_trace_segmented():
+    """Same, through the segment-latent (zmap) path: SLDA."""
+    rng = np.random.default_rng(3)
+    S = 80
+    sent_doc = np.sort(rng.integers(0, 12, size=S)).astype(np.int32)
+    tok_sent = np.repeat(np.arange(S, dtype=np.int32),
+                         rng.integers(3, 9, size=S))
+    xs = rng.integers(0, 20, size=len(tok_sent)).astype(np.int32)
+    m = models.make("slda", alpha=0.2, beta=0.2, K=3, V=20)
+    m["x"].observe(xs, segment_ids=tok_sent)
+    m.bind("sents", sent_doc)
+    m.infer(steps=8, seed=0)
+    np.testing.assert_allclose(m.elbo_trace, _GOLD_SLDA, rtol=1e-6)
+
+
 def test_lda_posterior_counts_conserved():
     toks, docs, _ = _make_corpus(seed=1)
     m = models.make("lda", alpha=0.1, beta=0.1, K=3, V=30)
