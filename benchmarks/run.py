@@ -9,6 +9,9 @@
                      gather+zstep+segment_sum chain)
     bench_svi        streaming SVI vs full-batch VMP at 4x the largest
                      full-batch corpus (held-out ELBO target + working set)
+    bench_outofcore  sharded on-disk corpus at 8x bench_svi's, streamed to
+                     the same held-out ELBO target at a bounded resident
+                     working set (+ bitwise sharded-vs-resident check)
 
 Prints ``name,us_per_call,derived`` CSV.  Select modules with
 ``python -m benchmarks.run [vmp|scaling|partition|kernels] ...``.
@@ -26,11 +29,11 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_partition, bench_scaling,
-                            bench_svi, bench_vmp)
+    from benchmarks import (bench_kernels, bench_outofcore, bench_partition,
+                            bench_scaling, bench_svi, bench_vmp)
     mods = {"vmp": bench_vmp, "scaling": bench_scaling,
             "partition": bench_partition, "kernels": bench_kernels,
-            "svi": bench_svi}
+            "svi": bench_svi, "outofcore": bench_outofcore}
     args = sys.argv[1:]
     json_mode = "--json" in args
     picks = [a for a in args if a in mods] or list(mods)

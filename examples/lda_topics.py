@@ -33,6 +33,11 @@ def main():
                     help="fraction of docs held out for per-token ELBO")
     ap.add_argument("--distributed", action="store_true",
                     help="shard over all local jax devices")
+    ap.add_argument("--corpus-dir", default=None,
+                    help="out-of-core mode (svi engine only): directory of "
+                         "a sharded corpus store; written from the "
+                         "synthetic corpus on first use, then minibatches "
+                         "stream from its shards (docs/data_pipeline.md)")
     ap.add_argument("--ckpt", default="/tmp/inferspark_lda_ck")
     args = ap.parse_args()
 
@@ -45,8 +50,33 @@ def main():
     print(f"[lda] corpus: {n} tokens, vocab {args.vocab}, "
           f"{args.topics} topics")
 
+    store = None
+    if args.corpus_dir is not None:
+        if args.engine != "svi":
+            ap.error("--corpus-dir needs --engine svi (the streaming "
+                     "engine is the out-of-core one)")
+        from repro.data import ShardedCorpus, write_sharded_corpus
+        if os.path.exists(os.path.join(args.corpus_dir, "manifest.json")):
+            store = ShardedCorpus.open(args.corpus_dir)
+            if (store.n_tokens != n or store.n_docs != n_docs
+                    or store.vocab != args.vocab):
+                ap.error(f"existing store at {args.corpus_dir} "
+                         f"({store.n_docs} docs / {store.n_tokens} tokens / "
+                         f"vocab {store.vocab}) does not match the requested "
+                         f"corpus ({n_docs} docs / {n} tokens / vocab "
+                         f"{args.vocab}); delete the directory or match "
+                         f"the flags")
+        else:
+            store = write_sharded_corpus(corpus, args.corpus_dir,
+                                         shard_tokens=1 << 18,
+                                         vocab=args.vocab)
+        print(f"[lda] sharded corpus at {args.corpus_dir}: "
+              f"{store.n_shards} shards, {store.n_tokens} tokens, "
+              f"{store.disk_bytes / 1e6:.1f} MB on disk")
+
     m = models.make("lda", alpha=0.1, beta=0.05, K=args.topics, V=args.vocab)
-    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    if store is None:
+        m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
 
     plan = None
     if args.distributed:
@@ -82,10 +112,16 @@ def main():
                   "--engine vmp path without --holdout")
         eng = make_engine(args.engine, steps=args.iters,
                           batch_size=args.batch_docs,
-                          holdout_frac=args.holdout, sharding=plan)
+                          holdout_frac=args.holdout, sharding=plan,
+                          corpus=store)
         result = eng.fit(m)
         dt = time.time() - t0
         print(f"[lda] {args.engine}: {args.iters} steps in {dt:.1f}s")
+        if store is not None:
+            print(f"[lda] out-of-core: read {store.bytes_read / 1e6:.1f} MB "
+                  f"from {store.n_shards} shards "
+                  f"({store.bytes_read / max(store.disk_bytes, 1):.1f}x "
+                  f"corpus bytes over {args.iters} steps)")
         if result.heldout_trace:
             print(f"[lda] held-out per-token ELBO: "
                   f"{result.heldout_elbo:.4f}")

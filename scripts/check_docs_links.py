@@ -1,0 +1,71 @@
+"""Check that intra-repo markdown links resolve.
+
+Scans every tracked ``*.md`` file for inline links/images
+(``[text](target)``), skips external schemes (http/https/mailto) and
+pure-anchor links, strips ``#fragment`` suffixes, resolves the rest
+relative to the containing file (or the repo root for ``/``-prefixed
+targets), and fails with a listing of every target that does not exist.
+
+    python scripts/check_docs_links.py [repo_root]
+
+Run by the CI docs job next to the README quickstart smoke test.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline markdown link/image: [text](target) — target up to ) or space
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def check(root: str) -> list[str]:
+    problems = []
+    for path in sorted(md_files(root)):
+        text = open(path, encoding="utf-8").read()
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for m in _LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                target = target.split("#", 1)[0]
+                if not target:
+                    continue
+                if target.startswith("/"):
+                    resolved = os.path.join(root, target.lstrip("/"))
+                else:
+                    resolved = os.path.join(os.path.dirname(path), target)
+                if not os.path.exists(resolved):
+                    rel = os.path.relpath(path, root)
+                    problems.append(f"{rel}:{lineno}: broken link "
+                                    f"-> {m.group(1)}")
+    return problems
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else
+                           os.path.join(os.path.dirname(__file__), ".."))
+    problems = check(root)
+    for p in problems:
+        print(p)
+    n = len(list(md_files(root)))
+    if problems:
+        print(f"{len(problems)} broken link(s) across {n} markdown files")
+        return 1
+    print(f"all intra-repo links resolve across {n} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,9 +5,11 @@ Covers:
   1. VMP distributed == single-device (inferspark + gspmd strategies)
   2. VMP communication: inferspark layout all-reduces only the global
      Dirichlets (theta stats move zero bytes)
-  3. LM train step on a (4 data, 2 model) mesh: runs + loss finite
-  4. elastic re-mesh: checkpoint on 8 devices, resume on 4, loss continues
-  5. long-context decode: batch=1 cache sharded over the sequence axis
+  3. out-of-core SVI (disk-sharded corpus) under a ShardingPlan is bitwise
+     the resident sharded-plan run
+  4. LM train step on a (4 data, 2 model) mesh: runs + loss finite
+  5. elastic re-mesh: checkpoint on 8 devices, resume on 4, loss continues
+  6. long-context decode: batch=1 cache sharded over the sequence axis
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -76,6 +78,36 @@ def check_svi_distributed_parity():
         assert err < 1e-4, (name, err)
     assert abs(h_single - h_shard) < 1e-3, (h_single, h_shard)
     print("PASS svi_parity")
+
+
+def check_svi_outofcore_parity(tmp="/tmp/repro_dist_shards"):
+    """Out-of-core SVI under a ShardingPlan: minibatches sliced from disk
+    shards and LPT-packed across the mesh must be bitwise the resident
+    sharded-plan run."""
+    import shutil
+
+    from repro.core.svi import SVI, SVIConfig
+    from repro.data import SyntheticCorpus, write_sharded_corpus
+    corpus = SyntheticCorpus(n_docs=40, vocab=50, n_topics=4, mean_len=40,
+                             seed=7).generate()
+    shutil.rmtree(tmp, ignore_errors=True)
+    store = write_sharded_corpus(corpus, tmp, shard_tokens=400)
+    mesh = make_mesh((8,), ("data",))
+    plan = ShardingPlan(mesh, ("data",), "inferspark")
+    cfg = SVIConfig(batch_size=8, holdout_frac=0.1, pad_multiple=32, seed=0)
+
+    m = models.make("lda", alpha=0.1, beta=0.1, K=4, V=50)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    s_res, _ = SVI(m.compile(), cfg, plan=plan).fit(steps=6)
+    svi = SVI(models.make("lda", alpha=0.1, beta=0.1, K=4, V=50), cfg,
+              plan=plan, corpus=store)
+    s_store, _ = svi.fit(steps=6)
+    svi.close()
+    for name in s_res.posteriors:
+        np.testing.assert_array_equal(np.asarray(s_res.posteriors[name]),
+                                      np.asarray(s_store.posteriors[name]))
+    shutil.rmtree(tmp, ignore_errors=True)
+    print("PASS svi_outofcore_parity")
 
 
 def check_vmp_collectives():
@@ -176,6 +208,7 @@ def check_long_context_sp_decode():
 if __name__ == "__main__":
     check_vmp_parity()
     check_svi_distributed_parity()
+    check_svi_outofcore_parity()
     check_vmp_collectives()
     check_lm_train_2d_mesh()
     check_elastic_remesh()

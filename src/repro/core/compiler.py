@@ -349,8 +349,22 @@ def local_dirichlets(program: VMPProgram) -> frozenset:
 
 
 def _padded(a: np.ndarray, cap: int, fill=0):
+    """Pad ``a``'s leading axis to ``cap`` with ``fill`` — shared by the
+    resident slicer below and ``repro.data.store.slice_sharded`` (whose
+    bitwise-equality contract depends on this exact convention)."""
     out = np.full((cap,) + a.shape[1:], fill, a.dtype)
     out[:len(a)] = a
+    return out
+
+
+def _slice_mask(cap: int, n: int, always_mask: bool):
+    """(cap,) float32 validity mask with ``n`` ones, or None for an
+    exactly-full axis when no padding policy is active — shared with
+    ``slice_sharded`` like :func:`_padded`."""
+    if cap == n and not always_mask:
+        return None
+    out = np.zeros(cap, np.float32)
+    out[:n] = 1.0
     return out
 
 
@@ -383,11 +397,7 @@ def slice_arrays(program: VMPProgram, groups, caps_fn=None):
     always_mask = caps_fn is not None
 
     def _mask(cap, n):
-        if cap == n and not always_mask:
-            return None
-        out = np.zeros(cap, np.float32)
-        out[:n] = 1.0
-        return out
+        return _slice_mask(cap, n, always_mask)
 
     arrays: dict[str, dict] = {}
     dir_rows: dict[str, dict] = {}

@@ -41,6 +41,9 @@ class EngineConfig:
     sharding: object = None         # ShardingPlan for vmp/svi; None = 1 device
     elog_dtype: object = None       # e.g. "bfloat16": narrow Elog message
                                     # tables in the token plate (f32 accum)
+    corpus: object = None           # svi only: a repro.data.ShardedCorpus
+                                    # for out-of-core minibatches; the model
+                                    # passed to fit() stays unobserved
     # svi (see SVIConfig for semantics)
     batch_size: int = 64
     kappa: float = 0.7
@@ -58,9 +61,12 @@ class EngineConfig:
 class InferenceResult:
     """What every backend returns: posterior summaries + diagnostics."""
     backend: str
-    posteriors: dict[str, np.ndarray]   # Dirichlet concentrations, or mean
-                                        # probabilities when meta["normalized"]
-    elbo_trace: list
+    posteriors: dict[str, np.ndarray]   # per Dirichlet RV: (G, K) float32
+                                        # concentrations, or (G, K) float64
+                                        # mean probabilities when
+                                        # meta["normalized"] (gibbs)
+    elbo_trace: list                    # per-step float ELBO (svi: noisy
+                                        # batch-scale estimates)
     heldout_trace: list                 # [(step, per-token heldout ELBO), ...]
     meta: dict
 
@@ -100,6 +106,10 @@ class VMPEngine(InferenceEngine):
 
     def fit(self, model) -> InferenceResult:
         cfg = self.cfg
+        if cfg.corpus is not None:
+            raise ValueError(
+                "full-batch VMP touches every token each step and needs a "
+                "resident corpus; use backend='svi' with corpus=")
         if cfg.holdout_frac > 0:
             return _fit_svi(model, cfg, full_batch=True)
         # every backend fits fresh: a model inferred before must not
@@ -115,7 +125,12 @@ class VMPEngine(InferenceEngine):
 
 
 class SVIEngine(InferenceEngine):
-    """Streaming minibatch VMP with natural-gradient global updates."""
+    """Streaming minibatch VMP with natural-gradient global updates
+    (Hoffman et al., JMLR 2013; see ``core/svi.py``).  Per-step cost is
+    O(batch tokens), not O(N); posteriors come back as ``(G, K) float32``
+    concentrations like ``vmp``'s.  With ``cfg.corpus`` (a
+    :class:`repro.data.ShardedCorpus`) minibatches stream from on-disk
+    shards and the model passed to ``fit`` stays unobserved."""
 
     name = "svi"
 
@@ -124,9 +139,18 @@ class SVIEngine(InferenceEngine):
 
 
 def _fit_svi(model, cfg: EngineConfig, full_batch: bool) -> InferenceResult:
+    """Shared SVI driver of the ``svi`` backend and the holdout-comparable
+    full-batch reference (``full_batch=True``: rho=1, |B| = all training
+    groups).  With ``cfg.corpus`` set, ``model`` stays unobserved and
+    minibatches stream from the sharded corpus (out-of-core mode)."""
     from .svi import SVI, SVIConfig
-    program: VMPProgram = model.compile()
-    n_groups = program.meta.get("pstar_size") or 0
+    if cfg.corpus is not None and full_batch:
+        raise ValueError("the full-batch reference needs a resident corpus")
+    if cfg.corpus is None:
+        target = model.compile()
+        n_groups = target.meta.get("pstar_size") or 0
+    else:
+        target, n_groups = model, cfg.corpus.n_docs
     scfg = SVIConfig(
         batch_size=(n_groups or 1) if full_batch else cfg.batch_size,
         kappa=cfg.kappa, tau=cfg.tau,
@@ -137,8 +161,11 @@ def _fit_svi(model, cfg: EngineConfig, full_batch: bool) -> InferenceResult:
         rho=1.0 if full_batch else None,
         elog_dtype=cfg.elog_dtype,
         seed=cfg.seed)
-    svi = SVI(program, scfg, plan=cfg.sharding)
-    state, history = svi.fit(steps=cfg.steps)
+    svi = SVI(target, scfg, plan=cfg.sharding, corpus=cfg.corpus)
+    try:
+        state, history = svi.fit(steps=cfg.steps)
+    finally:
+        svi.close()
     posts = {n: np.asarray(p) for n, p in state.posteriors.items()}
     return InferenceResult("vmp" if full_batch else "svi", posts,
                            history["elbo"], history["heldout"],
@@ -157,6 +184,9 @@ class GibbsEngine(InferenceEngine):
     def fit(self, model) -> InferenceResult:
         from .gibbs import gibbs_lda
         cfg = self.cfg
+        if cfg.corpus is not None:
+            raise ValueError("gibbs sweeps every token and needs a resident "
+                             "corpus; use backend='svi' with corpus=")
         program: VMPProgram = model.compile()
         spec, child = _lda_shape(program)
         theta_d = program.dirichlets[spec.prior_dir]

@@ -25,11 +25,17 @@ K) responsibilities), not with N: only the posterior state — O(sum G_d K_d)
 — persists.  Under a :class:`~repro.core.partition.ShardingPlan` each shard
 receives its own sub-minibatch and the global stats are psum'd, matching the
 full-batch engine's partitioning.
+
+The corpus itself need not be resident either: with ``SVI(corpus=...)`` a
+:class:`repro.data.ShardedCorpus` supplies each minibatch straight from
+memory-mapped disk shards (double-buffered host prefetch), bitwise
+equivalent to the resident path — see ``docs/data_pipeline.md``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -57,6 +63,8 @@ class SVIConfig:
     shuffle: bool = True           # reshuffle group order every epoch
     rho: Optional[float] = None    # constant step size override (rho=1 +
                                    # batch_size=G == exact full-batch VMP)
+    prefetch: bool = True          # sharded-corpus mode: overlap batch t+1's
+                                   # shard I/O with step t (double-buffered)
     seed: int = 0
 
     def __post_init__(self):
@@ -184,25 +192,34 @@ def make_svi_step(program: VMPProgram, caps: dict[str, int], plan=None,
     return jax.jit(sharded, donate_argnums=(0,) if donate else ())
 
 
-def device_batch(program: VMPProgram, groups, caps_fn=None, plan=None,
-                 group_weights: Optional[np.ndarray] = None):
-    """Slice one minibatch and place it on device.
+def host_batch(program: VMPProgram, groups, caps_fn=None, plan=None,
+               group_weights: Optional[np.ndarray] = None, slicer=None,
+               caps_probe=None):
+    """Build one minibatch's host-side (numpy) arrays.
 
     Returns ``(batch, caps, n_tokens)`` where ``batch = {"arrays", "dirs"}``
-    feeds :func:`make_svi_step`'s step.  With ``plan``, the batch's groups
+    holds numpy leaves — :func:`device_put_batch` places them on device and
+    :func:`make_svi_step`'s step consumes the result.  Pure host work (no
+    jax), so it can run on a prefetch thread.
+
+    ``slicer(groups, caps_fn) -> (arrays, dirs, caps, n_tokens)`` selects
+    the corpus view: default is :func:`repro.core.compiler.slice_arrays`
+    over the resident ``program``; the out-of-core path binds
+    :func:`repro.data.store.slice_sharded` instead (same contract, reads
+    only the shards the batch touches).  With ``plan``, the batch's groups
     are LPT-packed into ``plan.n_shards`` sub-minibatches by token mass
-    (weights), each shard's slice padded to shared caps and stacked on a
-    leading shard dim.
+    (``group_weights``), each shard's slice padded to shared caps and
+    stacked on a leading shard dim.  ``caps_probe(groups) -> caps`` — an
+    optional cheap predictor of the caps ``slicer(groups, None)`` would
+    realize; when given, the plan path learns shared caps without slicing
+    every sub-minibatch twice (the sharded probe reads no shards).
     """
+    if slicer is None:
+        slicer = lambda g, cf: slice_arrays(program, g, cf)  # noqa: E731
     groups = np.asarray(groups, np.int64)
     if plan is None:
-        arrays, dirs, caps, n_tok = slice_arrays(program, groups, caps_fn)
-        batch = {"arrays": {k: {kk: None if vv is None else jnp.asarray(vv)
-                                for kk, vv in v.items()}
-                            for k, v in arrays.items()},
-                 "dirs": {k: {kk: jnp.asarray(vv) for kk, vv in v.items()}
-                          for k, v in dirs.items()}}
-        return batch, caps, n_tok
+        arrays, dirs, caps, n_tok = slicer(groups, caps_fn)
+        return {"arrays": arrays, "dirs": dirs}, caps, n_tok
 
     from .partition import lpt_pack
     m = plan.n_shards
@@ -211,16 +228,18 @@ def device_batch(program: VMPProgram, groups, caps_fn=None, plan=None,
     shard_of = lpt_pack(np.maximum(w, 1), m)
     parts = [groups[shard_of == s] for s in range(m)]
 
-    # shared caps: slice each shard exact, take maxima, then re-pad
-    sliced = [slice_arrays(program, p, None) for p in parts]
+    # shared caps: probe (or slice) each shard exact, take maxima, re-pad
+    if caps_probe is not None:
+        part_caps = [caps_probe(p) for p in parts]
+    else:
+        part_caps = [slicer(p, None)[2] for p in parts]
     caps: dict[str, int] = {}
-    for _, _, c, _ in sliced:
+    for c in part_caps:
         for k, v in c.items():
             caps[k] = max(caps.get(k, 1), v)
     if caps_fn is not None:
         caps = {k: max(int(caps_fn(k, v)), v) for k, v in caps.items()}
-    resliced = [slice_arrays(program, p, lambda name, n: caps[name])
-                for p in parts]
+    resliced = [slicer(p, lambda name, n: caps[name]) for p in parts]
 
     arrays = {}
     for name in resliced[0][0]:
@@ -230,14 +249,33 @@ def device_batch(program: VMPProgram, groups, caps_fn=None, plan=None,
             if leaves[0] is None:
                 arrays[name][kk] = None
             else:
-                arrays[name][kk] = jnp.asarray(np.stack(leaves))
+                arrays[name][kk] = np.stack(leaves)
     dirs = {}
     for name in resliced[0][1]:
-        dirs[name] = {kk: jnp.asarray(np.stack([r[1][name][kk]
-                                                for r in resliced]))
+        dirs[name] = {kk: np.stack([r[1][name][kk] for r in resliced])
                       for kk in resliced[0][1][name]}
     n_tok = sum(r[3] for r in resliced)
     return {"arrays": arrays, "dirs": dirs}, caps, n_tok
+
+
+def device_put_batch(batch: dict) -> dict:
+    """Place a :func:`host_batch` result's numpy leaves on device
+    (``None`` leaves pass through)."""
+    return {"arrays": {k: {kk: None if vv is None else jnp.asarray(vv)
+                           for kk, vv in v.items()}
+                       for k, v in batch["arrays"].items()},
+            "dirs": {k: {kk: jnp.asarray(vv) for kk, vv in v.items()}
+                     for k, v in batch["dirs"].items()}}
+
+
+def device_batch(program: VMPProgram, groups, caps_fn=None, plan=None,
+                 group_weights: Optional[np.ndarray] = None, slicer=None):
+    """Slice one minibatch and place it on device:
+    :func:`host_batch` + :func:`device_put_batch` (see those for the
+    parameter contracts).  Returns ``(batch, caps, n_tokens)``."""
+    batch, caps, n_tok = host_batch(program, groups, caps_fn, plan,
+                                    group_weights, slicer)
+    return device_put_batch(batch), caps, n_tok
 
 
 # ---------------------------------------------------------------------------
@@ -275,19 +313,24 @@ def _build_heldout_fn(program: VMPProgram, caps: dict[str, int],
 
 
 def heldout_elbo(program: VMPProgram, state: VMPState, groups,
-                 inner_iters: int = 10, cache: Optional[dict] = None) -> float:
+                 inner_iters: int = 10, cache: Optional[dict] = None,
+                 slicer=None) -> float:
     """Per-token ELBO on held-out groups under the current global
     posteriors: fresh local posteriors start at the prior, take
     ``inner_iters`` coordinate-ascent passes with the globals frozen, and
     the global Dirichlets' KL terms (training-objective bookkeeping, not
     predictive quality) are excluded.  Comparable across engines and batch
-    sizes — the convergence metric of the streaming engine.
+    sizes — the convergence metric of the streaming engine.  Returns a
+    python float (nats/token); NaN when the groups hold no tokens.
 
     ``cache`` (a caller-owned dict, e.g. the :class:`SVI` instance's)
     memoizes the jitted evaluator per (caps, inner_iters) signature; without
-    it each call retraces."""
+    it each call retraces.  ``slicer`` as in :func:`host_batch` (the
+    out-of-core path reads the held-out documents from their shards)."""
     groups = np.asarray(groups, np.int64)
-    arrays, dirs, caps, n_tok = slice_arrays(program, groups, None)
+    if slicer is None:
+        slicer = lambda g, cf: slice_arrays(program, g, cf)  # noqa: E731
+    arrays, dirs, caps, n_tok = slicer(groups, None)
     if n_tok == 0:
         return float("nan")
     fn = None
@@ -318,31 +361,76 @@ class SVI:
     ``history["elbo"]`` is the per-step batch ELBO (noisy — a stochastic
     estimate at batch scale); ``history["heldout"]`` is the per-token
     held-out ELBO trace ``[(step, value), ...]`` (the convergence signal).
+
+    **Out-of-core mode**: pass ``corpus=`` a
+    :class:`~repro.data.store.ShardedCorpus` and, as the first argument,
+    either an unobserved :class:`~repro.core.dsl.Model` (it is compiled
+    into a full-size template via
+    :func:`repro.data.store.sharded_template`) or such a template
+    directly.  Minibatches are then read from the corpus's on-disk shards
+    (only the shards the batch touches), host-side batch construction is
+    double-buffered on a prefetch thread (``SVIConfig.prefetch``), and the
+    per-process resident corpus state is O(n_docs) (the lengths array) +
+    two batches' buffers.  The holdout split and the ``(seed, epoch)``
+    minibatch permutation are byte-identical to resident mode, so on a
+    corpus small enough to run both ways the fitted posteriors are
+    **bitwise equal** (``tests/test_store.py``)::
+
+        corpus = ShardedCorpus.open("/data/corpus")
+        svi = SVI(models.make("lda", ...), SVIConfig(batch_size=256),
+                  corpus=corpus)
     """
 
-    def __init__(self, program: VMPProgram, config: SVIConfig = None,
-                 plan=None):
+    def __init__(self, program, config: SVIConfig = None, plan=None,
+                 corpus=None):
         from repro.data.pipeline import MinibatchSampler, holdout_split
-        self.program = program
         self.cfg = config or SVIConfig()
         self.plan = plan
+        self.corpus = corpus
+        self._slicer = None
+        self._caps_probe = None
+        if corpus is not None:
+            from repro.data import store as _store
+            if not isinstance(program, VMPProgram):
+                program = _store.sharded_template(program, corpus)
+            if not program.meta.get("sharded"):
+                raise ValueError(
+                    "corpus= needs a sharded template program; build one "
+                    "with repro.data.store.sharded_template(model, corpus)")
+            self._slicer = functools.partial(_store.slice_sharded,
+                                             program, corpus)
+            self._caps_probe = functools.partial(_store.sharded_caps,
+                                                 program, corpus)
+        self.program = program
         if program.meta.get("pstar") is None:
             raise ValueError("SVI needs a '?' partition plate "
                              "(documents) to sample minibatches over")
         n_groups = program.meta["pstar_size"]
-        self.train, self.holdout = holdout_split(
-            n_groups, self.cfg.holdout_frac, self.cfg.seed)
-        if len(self.train) == 0:
-            raise ValueError("holdout_frac leaves no training groups")
-        self.sampler = MinibatchSampler(
-            groups=self.train, batch_size=min(self.cfg.batch_size,
-                                              len(self.train)),
-            seed=self.cfg.seed, shuffle=self.cfg.shuffle)
-        self._weights = self._group_token_weights()
+        if self.cfg.holdout_frac == 0:
+            self.train = np.arange(n_groups, dtype=np.int64)
+            self.holdout = np.zeros(0, np.int64)
+        else:
+            self.train, self.holdout = holdout_split(
+                n_groups, self.cfg.holdout_frac, self.cfg.seed)
+        batch_size = min(self.cfg.batch_size, len(self.train))
+        if corpus is not None:
+            from repro.data.store import ShardedMinibatchSampler
+            self._weights = np.asarray(corpus.lengths, np.int64)
+            self.sampler = ShardedMinibatchSampler(
+                corpus=corpus, groups=self.train, batch_size=batch_size,
+                seed=self.cfg.seed, shuffle=self.cfg.shuffle,
+                loader=self._load_groups, prefetch=self.cfg.prefetch)
+        else:
+            self.sampler = MinibatchSampler(
+                groups=self.train, batch_size=batch_size,
+                seed=self.cfg.seed, shuffle=self.cfg.shuffle)
+            self._weights = self._group_token_weights()
         self._steps: dict = {}
         self._heldout_cache: dict = {}
 
     def _group_token_weights(self) -> np.ndarray:
+        """Per-group observed-token counts ``(pstar_size,) int64`` — the
+        LPT packing weights of the distributed path."""
         w = np.zeros(self.program.meta["pstar_size"], np.int64)
         for spec in self.program.latents:
             for f in spec.children:
@@ -357,12 +445,24 @@ class SVI:
         m = self.cfg.pad_multiple
         return n if not m else -(-max(n, 1) // m) * m
 
+    def _load_groups(self, groups):
+        """Host-batch loader for one group set (runs on the prefetch
+        thread in sharded mode — numpy only).  Returns
+        ``(batch, caps, n_tokens, n_groups)``."""
+        hb, caps, n_tok = host_batch(self.program, groups, self._caps_fn,
+                                     plan=self.plan,
+                                     group_weights=self._weights,
+                                     slicer=self._slicer,
+                                     caps_probe=self._caps_probe)
+        return hb, caps, n_tok, len(groups)
+
     def step(self, t: int, state: VMPState):
         """One SVI step at schedule position ``t``; returns (state', elbo)."""
-        groups = self.sampler.batch_at(t)
-        batch, caps, _ = device_batch(
-            self.program, groups, self._caps_fn, plan=self.plan,
-            group_weights=self._weights)
+        if self.corpus is not None:
+            hb, caps, _, n_b = self.sampler.host_batch_at(t)
+        else:
+            hb, caps, _, n_b = self._load_groups(self.sampler.batch_at(t))
+        batch = device_put_batch(hb)
         sig = tuple(sorted(caps.items()))
         if sig not in self._steps:
             self._steps[sig] = make_svi_step(
@@ -371,16 +471,24 @@ class SVI:
                 elog_dtype=self.cfg.elog_dtype)
         rho = (self.cfg.rho if self.cfg.rho is not None
                else robbins_monro(t, self.cfg.tau, self.cfg.kappa))
-        scale = len(self.train) / len(groups)
+        # n_b is the true batch size (the epoch's tail batch may be short)
+        scale = len(self.train) / n_b
         return self._steps[sig](state, batch, jnp.float32(rho),
                                 jnp.float32(scale))
 
     def heldout_elbo(self, state: VMPState) -> float:
+        """Per-token held-out ELBO at ``state`` (NaN without a holdout)."""
         if len(self.holdout) == 0:
             return float("nan")
         return heldout_elbo(self.program, state, self.holdout,
                             self.cfg.holdout_local_iters,
-                            cache=self._heldout_cache)
+                            cache=self._heldout_cache, slicer=self._slicer)
+
+    def close(self):
+        """Stop the sharded sampler's prefetch thread (no-op in resident
+        mode; further ``fit`` calls restart prefetching lazily)."""
+        if hasattr(self.sampler, "close"):
+            self.sampler.close()
 
     def fit(self, steps: int, state: Optional[VMPState] = None,
             callback=None):

@@ -1,2 +1,5 @@
 from .pipeline import (MinibatchSampler, SyntheticCorpus,  # noqa: F401
                        TokenStream, holdout_split)
+from .store import (ShardedCorpus, ShardedCorpusWriter,  # noqa: F401
+                    ShardedMinibatchSampler, sharded_template,
+                    slice_sharded, write_sharded_corpus)

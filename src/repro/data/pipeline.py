@@ -12,6 +12,9 @@ Two producers:
   shard draws a disjoint stream (the host only materializes its own shard).
 
 Everything is numpy on the host; device placement happens in the launcher.
+Both producers materialize their arrays in memory; for corpora that live on
+disk, ``store.py`` provides the sharded out-of-core counterpart (same
+sampler determinism contract — see ``docs/data_pipeline.md``).
 """
 
 from __future__ import annotations
@@ -23,7 +26,15 @@ import numpy as np
 
 @dataclasses.dataclass
 class SyntheticCorpus:
-    """Planted-topic corpus: theta_d ~ Dir(alpha), phi_k ~ Dir(beta)."""
+    """Planted-topic corpus: theta_d ~ Dir(alpha), phi_k ~ Dir(beta).
+
+    ``generate()`` returns a dict of numpy arrays — ``tokens`` and
+    ``doc_ids`` ``(N,) int32`` (documents stored back to back, doc ids
+    nondecreasing), ``lengths`` ``(n_docs,) int64``, ``z`` ``(N,) int32``
+    planted topic per token, and the planted distributions ``true_phi``
+    ``(n_topics, vocab)`` / ``true_theta`` ``(n_docs, n_topics)`` float64 —
+    deterministic in ``seed``.
+    """
     n_docs: int
     vocab: int
     n_topics: int
@@ -70,8 +81,8 @@ class MinibatchSampler:
     sorted (instance order inside a sliced program then matches the
     corpus's group-major order, which keeps full-batch slicing an identity).
     """
-    groups: np.ndarray               # group ids to sample over (e.g. doc ids)
-    batch_size: int
+    groups: np.ndarray               # (G,) int group ids (e.g. doc ids)
+    batch_size: int                  # groups per batch; must be <= G
     seed: int = 0
     shuffle: bool = True
 
@@ -81,12 +92,22 @@ class MinibatchSampler:
             raise ValueError("batch_size must be positive")
         if len(self.groups) == 0:
             raise ValueError("no groups to sample")
+        if self.batch_size > len(self.groups):
+            raise ValueError(
+                f"batch_size {self.batch_size} exceeds the {len(self.groups)}"
+                f" available groups; clamp it (the SVI driver clamps to "
+                f"min(batch_size, n_train_groups)) or add groups")
 
     @property
     def batches_per_epoch(self) -> int:
         return -(-len(self.groups) // self.batch_size)
 
     def batch_at(self, step: int) -> np.ndarray:
+        """Sorted ``(<=batch_size,) int64`` group ids of schedule slot
+        ``step`` (the epoch's tail batch may be short); a pure function of
+        ``(seed, step)``."""
+        if step < 0:
+            raise ValueError(f"step must be >= 0, got {step}")
         epoch, idx = divmod(int(step), self.batches_per_epoch)
         if self.shuffle:
             rng = np.random.default_rng(
@@ -99,16 +120,43 @@ class MinibatchSampler:
 
 
 def holdout_split(n_groups: int, frac: float, seed: int = 0):
-    """Deterministic (train, holdout) group split; both sorted."""
+    """Deterministic ``(train, holdout)`` group split — two sorted, disjoint
+    ``int64`` arrays covering ``arange(n_groups)``, pure in ``seed``.
+
+    ``frac`` must satisfy ``0 < frac < 1`` *and* round to at least one group
+    on each side: silent empty splits produced nonsense downstream (NaN
+    held-out ELBOs, un-trainable models), so degenerate requests raise
+    instead.  Callers that genuinely want no holdout should skip the split
+    (the SVI driver does this for ``holdout_frac=0``).
+    """
+    if n_groups <= 0:
+        raise ValueError(f"n_groups must be positive, got {n_groups}")
+    if not 0.0 < frac < 1.0:
+        raise ValueError(
+            f"holdout frac must be in (0, 1), got {frac}; for no holdout "
+            f"skip the split instead of requesting an empty one")
+    n_hold = int(round(frac * n_groups))
+    if n_hold == 0:
+        raise ValueError(
+            f"frac={frac} rounds to an empty holdout over {n_groups} "
+            f"groups; raise frac (>= {0.5 / n_groups:.4g}) or skip the split")
+    if n_hold == n_groups:
+        raise ValueError(
+            f"frac={frac} holds out all {n_groups} groups, leaving nothing "
+            f"to train on; lower frac")
     rng = np.random.default_rng(seed)
     perm = rng.permutation(n_groups)
-    n_hold = int(round(frac * n_groups))
     return np.sort(perm[n_hold:]), np.sort(perm[:n_hold])
 
 
 @dataclasses.dataclass
 class TokenStream:
-    """Packed LM batches; ``batch_at`` is pure in (seed, step, shard)."""
+    """Packed LM batches; ``batch_at`` is pure in (seed, step, shard).
+
+    ``batch_at(step)`` returns ``{"tokens", "labels"}``, each
+    ``(batch, seq_len) int32`` with ``labels`` the one-position shift of
+    ``tokens`` (next-token targets); shards draw disjoint streams.
+    """
     vocab: int
     seq_len: int
     batch: int                      # per-shard batch

@@ -1,0 +1,675 @@
+"""Out-of-core sharded corpus store for the streaming (SVI) engine.
+
+The resident pipeline (``pipeline.py``) assumes the whole corpus — the
+``(N,) int32`` token array plus its ``(N,) int32`` doc ids — lives in one
+process's memory, which caps scale exactly where the paper starts.  This
+module keeps the corpus on disk instead:
+
+- :class:`ShardedCorpus` — a directory of memory-mapped token shards plus a
+  ``manifest.json`` of per-shard group (document) offsets and vocab stats,
+  and a small resident ``lengths.npy`` (``(n_docs,) int64``, the only
+  O(n_docs) state).  Shards are split on document boundaries, so a document
+  minibatch touches only the shards its documents live in.
+- :class:`ShardedCorpusWriter` / :func:`write_sharded_corpus` — convert a
+  :class:`~repro.data.pipeline.SyntheticCorpus` result (or any
+  ``tokens``/``doc_ids`` numpy pair) to shards; the writer appends document
+  chunks, so a corpus larger than memory can be ingested without ever being
+  resident.
+- :func:`sharded_template` / :func:`slice_sharded` — compile a model into a
+  full-size :class:`~repro.core.compiler.VMPProgram` *template* whose
+  ``(N,)`` arrays are never materialized, and slice minibatches from the
+  shards so that the produced device arrays are **bitwise identical** to
+  what :func:`repro.core.compiler.slice_arrays` builds from a resident
+  program (``tests/test_store.py`` checks the resulting posteriors bitwise).
+- :class:`ShardedMinibatchSampler` — the :class:`MinibatchSampler`
+  determinism contract (same ``(seed, epoch)`` permutation, seekable
+  ``batch_at``) over a sharded corpus, plus a background double-buffered
+  prefetch thread so building batch ``t+1``'s host arrays (shard I/O, index
+  construction) overlaps the jitted SVI step on batch ``t``.
+
+Everything here is numpy on the host; device placement stays in
+``core/svi.py``.  See ``docs/data_pipeline.md`` for the on-disk layout and
+the determinism/prefetch contracts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Callable, Optional
+
+import numpy as np
+
+from .pipeline import MinibatchSampler, SyntheticCorpus
+
+_MANIFEST = "manifest.json"
+_LENGTHS = "lengths.npy"
+_FORMAT = "sharded-corpus"
+_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# writer
+# ---------------------------------------------------------------------------
+
+class ShardedCorpusWriter:
+    """Append-only converter to the on-disk sharded format.
+
+    Call :meth:`add_docs` with ``(tokens, lengths)`` chunks — ``tokens`` a
+    ``(sum lengths,) int`` array of the chunk's documents back to back,
+    ``lengths`` their ``(n_chunk_docs,) int`` token counts — then
+    :meth:`close`.  A shard file is flushed whenever the buffered token
+    count reaches ``shard_tokens`` (always on a document boundary, so one
+    document never spans shards unless it alone exceeds ``shard_tokens``,
+    in which case it gets a dedicated oversized shard).  Chunks can be far
+    smaller than the corpus: ingestion is streaming and never holds more
+    than one unflushed shard resident.
+    """
+
+    def __init__(self, path: str, shard_tokens: int = 1 << 22,
+                 vocab: Optional[int] = None):
+        if shard_tokens <= 0:
+            raise ValueError("shard_tokens must be positive")
+        self.path = str(path)
+        self.shard_tokens = int(shard_tokens)
+        self._vocab = vocab
+        self._buf: list[np.ndarray] = []        # tokens of pending docs
+        self._buf_off = 0                       # consumed prefix of _buf[0]
+        self._buf_tokens = 0
+        self._pending: list[int] = []           # lengths of pending docs
+        self._done_lengths: list[np.ndarray] = []
+        self._shards: list[dict] = []
+        self._n_docs = 0
+        self._n_tokens = 0
+        self._token_max = -1
+        self._closed = False
+        os.makedirs(self.path, exist_ok=True)
+
+    def add_docs(self, tokens, lengths) -> "ShardedCorpusWriter":
+        """Append one chunk of whole documents (see class docstring)."""
+        if self._closed:
+            raise RuntimeError("writer is closed")
+        tokens = np.ascontiguousarray(tokens, np.int32).ravel()
+        lengths = np.asarray(lengths, np.int64).ravel()
+        if (lengths < 0).any():
+            raise ValueError("negative document length")
+        if int(lengths.sum()) != len(tokens):
+            raise ValueError(f"lengths sum to {int(lengths.sum())} but chunk "
+                             f"has {len(tokens)} tokens")
+        if len(tokens) and int(tokens.min()) < 0:
+            raise ValueError("negative token id")
+        if len(tokens):
+            self._token_max = max(self._token_max, int(tokens.max()))
+        self._n_docs += len(lengths)
+        self._n_tokens += len(tokens)
+        self._pending.extend(int(n) for n in lengths)
+        self._buf.append(tokens)
+        self._buf_tokens += len(tokens)
+        # flush whole-document prefixes while a full shard is buffered:
+        # one cumsum + one prefix-trim per call, not per shard, so a
+        # single huge add_docs stays O(n_docs + tokens)
+        if self._buf_tokens < self.shard_tokens or not self._pending:
+            return self
+        cum = np.cumsum(np.asarray(self._pending, np.int64))
+        lo, base = 0, 0
+        while cum[-1] - base >= self.shard_tokens:
+            idx = int(np.searchsorted(cum, base + self.shard_tokens))
+            if idx >= len(cum) - 1:
+                break                     # keep a tail for the next chunk
+            self._flush(np.asarray(self._pending[lo:idx + 1], np.int64))
+            lo, base = idx + 1, int(cum[idx])
+        del self._pending[:lo]
+        return self
+
+    def _take(self, n_tok: int) -> np.ndarray:
+        """Pop the next ``n_tok`` buffered tokens (amortized O(n_tok):
+        whole chunks are consumed by popping, never re-concatenated)."""
+        pieces, need = [], n_tok
+        while need:
+            head = self._buf[0]
+            avail = len(head) - self._buf_off
+            if avail <= need:
+                pieces.append(head[self._buf_off:])
+                self._buf.pop(0)
+                self._buf_off = 0
+                need -= avail
+            else:
+                pieces.append(head[self._buf_off:self._buf_off + need])
+                self._buf_off += need
+                need = 0
+        self._buf_tokens -= n_tok
+        return (pieces[0] if len(pieces) == 1
+                else np.concatenate(pieces) if pieces
+                else np.zeros(0, np.int32))
+
+    def _flush(self, lengths: np.ndarray):
+        """Write the next ``len(lengths)`` pending documents as one shard
+        (the caller trims ``_pending``)."""
+        n_docs = len(lengths)
+        n_tok = int(lengths.sum())
+        shard = self._take(n_tok)
+        done_docs = (self._shards[-1]["doc_end"] if self._shards else 0)
+        tok_start = (self._shards[-1]["token_end"] if self._shards else 0)
+        fname = f"shard-{len(self._shards):05d}.npy"
+        np.save(os.path.join(self.path, fname),
+                np.ascontiguousarray(shard))
+        self._shards.append({
+            "path": fname,
+            "doc_start": done_docs, "doc_end": done_docs + n_docs,
+            "token_start": tok_start, "token_end": tok_start + n_tok,
+            "token_min": int(shard.min()) if n_tok else 0,
+            "token_max": int(shard.max()) if n_tok else 0,
+        })
+        self._done_lengths.append(lengths)
+
+    def close(self) -> "ShardedCorpus":
+        """Flush the tail shard, write ``manifest.json`` + ``lengths.npy``,
+        and return the opened :class:`ShardedCorpus`."""
+        if self._closed:
+            raise RuntimeError("writer is closed")
+        if self._n_docs == 0:
+            raise ValueError("cannot write an empty corpus")
+        if self._pending:
+            self._flush(np.asarray(self._pending, np.int64))
+            self._pending = []
+        lengths = np.concatenate(self._done_lengths)
+        np.save(os.path.join(self.path, _LENGTHS), lengths)
+        vocab = self._token_max + 1
+        if self._vocab is not None:
+            if self._vocab < vocab:
+                raise ValueError(f"vocab={self._vocab} but corpus has token "
+                                 f"id {self._token_max}")
+            vocab = int(self._vocab)
+        manifest = {"format": _FORMAT, "version": _VERSION,
+                    "n_docs": self._n_docs, "n_tokens": self._n_tokens,
+                    "vocab": vocab, "dtype": "int32",
+                    "shards": self._shards}
+        with open(os.path.join(self.path, _MANIFEST), "w") as fh:
+            json.dump(manifest, fh, indent=1)
+        self._closed = True
+        return ShardedCorpus.open(self.path)
+
+
+def write_sharded_corpus(corpus, path: str, shard_tokens: int = 1 << 22,
+                         vocab: Optional[int] = None) -> "ShardedCorpus":
+    """One-shot conversion of a resident corpus to the sharded format.
+
+    ``corpus`` is a :class:`~repro.data.pipeline.SyntheticCorpus` (it is
+    generated first), the dict its ``generate()`` returns, or any dict with
+    ``tokens`` (``(N,) int``) plus either ``lengths`` (``(n_docs,) int``)
+    or ``doc_ids`` (``(N,) int``, nondecreasing — documents must be stored
+    back to back, the layout ``SyntheticCorpus`` and the compiler use).
+    """
+    if isinstance(corpus, SyntheticCorpus):
+        corpus = corpus.generate()
+    tokens = np.asarray(corpus["tokens"])
+    if "lengths" in corpus:
+        lengths = np.asarray(corpus["lengths"], np.int64)
+    else:
+        doc_ids = np.asarray(corpus["doc_ids"], np.int64)
+        if len(doc_ids) != len(tokens):
+            raise ValueError("doc_ids must align with tokens")
+        if len(doc_ids) and (np.diff(doc_ids) < 0).any():
+            raise ValueError("doc_ids must be nondecreasing (documents "
+                             "stored back to back)")
+        n_docs = int(doc_ids.max()) + 1 if len(doc_ids) else 0
+        lengths = np.bincount(doc_ids, minlength=n_docs).astype(np.int64)
+    return ShardedCorpusWriter(path, shard_tokens=shard_tokens,
+                               vocab=vocab).add_docs(tokens, lengths).close()
+
+
+# ---------------------------------------------------------------------------
+# reader
+# ---------------------------------------------------------------------------
+
+class ShardedCorpus:
+    """A corpus that lives on disk as document-aligned token shards.
+
+    Only ``lengths`` (``(n_docs,) int64``) and the manifest are resident;
+    token shards are opened as read-only memory maps and copied into host
+    buffers one minibatch at a time (:meth:`gather_tokens`).  ``bytes_read``
+    / ``reads`` count the explicit buffer traffic — the accounting the
+    out-of-core benchmark reports.
+    """
+
+    def __init__(self, path: str, manifest: dict, lengths: np.ndarray):
+        self.path = str(path)
+        self.manifest = manifest
+        self.lengths = np.asarray(lengths, np.int64)
+        # offsets[d] is doc d's first token position; (n_docs + 1,) int64
+        self.offsets = np.concatenate([[0], np.cumsum(self.lengths)])
+        self._shard_tok_start = np.asarray(
+            [s["token_start"] for s in manifest["shards"]], np.int64)
+        self._shard_tok_end = np.asarray(
+            [s["token_end"] for s in manifest["shards"]], np.int64)
+        self._mmaps: dict[int, np.ndarray] = {}
+        self._lock = threading.Lock()   # gather_tokens runs on the prefetch
+        self.bytes_read = 0             # thread concurrently with held-out
+        self.reads = 0                  # slicing on the consumer thread
+        if int(self.offsets[-1]) != self.n_tokens:
+            raise ValueError(f"{path}: lengths sum {int(self.offsets[-1])} "
+                             f"!= manifest n_tokens {self.n_tokens}")
+
+    @classmethod
+    def open(cls, path: str) -> "ShardedCorpus":
+        """Open an existing store directory (``manifest.json`` required)."""
+        mf = os.path.join(str(path), _MANIFEST)
+        if not os.path.exists(mf):
+            raise FileNotFoundError(f"no {_MANIFEST} in {path}; write one "
+                                    f"with write_sharded_corpus()")
+        with open(mf) as fh:
+            manifest = json.load(fh)
+        if manifest.get("format") != _FORMAT:
+            raise ValueError(f"{mf}: not a {_FORMAT} manifest")
+        lengths = np.load(os.path.join(str(path), _LENGTHS))
+        return cls(path, manifest, lengths)
+
+    # -- metadata ---------------------------------------------------------
+    @property
+    def n_docs(self) -> int:
+        return int(self.manifest["n_docs"])
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.manifest["n_tokens"])
+
+    @property
+    def vocab(self) -> int:
+        """Max token id + 1 (or the writer's explicit ``vocab``)."""
+        return int(self.manifest["vocab"])
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.manifest["shards"])
+
+    @property
+    def disk_bytes(self) -> int:
+        """Total bytes of the token shards on disk."""
+        return sum(os.path.getsize(os.path.join(self.path, s["path"]))
+                   for s in self.manifest["shards"])
+
+    def _mmap(self, sid: int) -> np.ndarray:
+        with self._lock:
+            mm = self._mmaps.get(sid)
+            if mm is None:
+                mm = np.load(
+                    os.path.join(self.path,
+                                 self.manifest["shards"][sid]["path"]),
+                    mmap_mode="r")
+                self._mmaps[sid] = mm
+            return mm
+
+    # -- reads ------------------------------------------------------------
+    def _read_token_range(self, lo: int, hi: int) -> list[np.ndarray]:
+        """Copy tokens [lo, hi) out of the (possibly several) shards that
+        hold them; returns the pieces in order."""
+        out = []
+        sid = int(np.searchsorted(self._shard_tok_start, lo, "right")) - 1
+        while lo < hi:
+            s_lo = int(self._shard_tok_start[sid])
+            s_hi = int(self._shard_tok_end[sid])
+            take = min(hi, s_hi)
+            piece = np.asarray(self._mmap(sid)[lo - s_lo:take - s_lo])
+            with self._lock:
+                self.bytes_read += piece.nbytes
+                self.reads += 1
+            out.append(piece)
+            lo = take
+            sid += 1
+        return out
+
+    def gather_tokens(self, docs) -> np.ndarray:
+        """Concatenated tokens of ``docs`` (``(n,) int`` doc ids, in the
+        given order) as a fresh ``(sum lengths[docs],) int32`` host buffer.
+        Consecutive-id runs are merged into single range reads, so a sorted
+        minibatch touches each shard at most once per contiguous run."""
+        docs = np.asarray(docs, np.int64)
+        if len(docs) == 0:
+            return np.zeros(0, np.int32)
+        if int(docs.min()) < 0 or int(docs.max()) >= self.n_docs:
+            raise IndexError(f"doc ids out of range [0, {self.n_docs})")
+        starts = self.offsets[docs]
+        ends = self.offsets[docs + 1]
+        pieces: list[np.ndarray] = []
+        i = 0
+        while i < len(docs):
+            j = i
+            while j + 1 < len(docs) and docs[j + 1] == docs[j] + 1:
+                j += 1
+            pieces.extend(self._read_token_range(int(starts[i]),
+                                                 int(ends[j])))
+            i = j + 1
+        return np.concatenate(pieces) if pieces else np.zeros(0, np.int32)
+
+    def resident(self) -> dict:
+        """Materialize the whole corpus (``tokens``/``doc_ids``/``lengths``)
+        — for tests and corpora small enough to run both ways; defeats the
+        point at scale."""
+        tokens = self.gather_tokens(np.arange(self.n_docs))
+        doc_ids = np.repeat(np.arange(self.n_docs, dtype=np.int32),
+                            self.lengths)
+        return {"tokens": tokens, "doc_ids": doc_ids,
+                "lengths": self.lengths.copy()}
+
+
+# ---------------------------------------------------------------------------
+# full-size program template + sharded minibatch slicing
+# ---------------------------------------------------------------------------
+
+def _token_plate_spec(program):
+    """The (latent, child) pair of a token-plate program, or raise.
+
+    The sharded slicer supports the corpus-shaped model family: exactly one
+    latent selector living *on* the observed token plate (no ``zmap``), one
+    specialized child (rows are the selector value: ``base is None``,
+    ``stride == 1`` — LDA's shape), no static factors.  Models whose
+    per-token index arrays cannot be rebuilt from (tokens, lengths) alone
+    (SLDA's sentence maps, DCMLDA's per-doc row bases, naive Bayes'
+    doc-level latents) need the resident pipeline.
+    """
+    if (len(program.latents) == 1 and not program.statics
+            and len(program.latents[0].children) == 1):
+        spec = program.latents[0]
+        f = spec.children[0]
+        if f.specialized and f.zmap is None:
+            return spec, f
+    raise ValueError(
+        f"model {program.name} is outside the sharded-corpus family (need "
+        f"one token-plate latent with one specialized child and no static "
+        f"factors, like LDA); use the resident pipeline")
+
+
+def sharded_template(model, corpus: ShardedCorpus,
+                     observe: str = "x", proto_docs: int = 2):
+    """Compile ``model`` into a full-size program template for ``corpus``
+    without materializing any ``(N,)`` array.
+
+    A tiny prototype slice (the first ``proto_docs`` documents) is observed
+    on a deep copy of ``model`` and compiled to capture the program
+    *structure*; the specs are then rescaled to the corpus: local
+    Dirichlets get ``g = n_docs`` rows, ``meta["pstar_size"] = n_docs``,
+    the latent spec ``n = n_tokens``.  The template's per-token arrays
+    (``prior_rows``, child ``values``, ``group``) are set to ``None`` —
+    :func:`slice_sharded` rebuilds each minibatch's slice from the shards
+    instead, and any resident-path access fails loudly.  The caller's
+    ``model`` is left untouched (it really does stay unobserved).
+    """
+    import copy
+    import dataclasses as dc
+
+    from repro.core.compiler import VMPProgram
+
+    model = copy.deepcopy(model)      # the prototype observation is ours
+    p = min(int(proto_docs), corpus.n_docs)
+    if p < 1:
+        raise ValueError("corpus has no documents")
+    proto_tokens = corpus.gather_tokens(np.arange(p))
+    proto_ids = np.repeat(np.arange(p, dtype=np.int32), corpus.lengths[:p])
+    try:
+        model[observe].observe(proto_tokens, segment_ids=proto_ids)
+    except ValueError as e:
+        raise ValueError(f"corpus (vocab {corpus.vocab}) does not fit "
+                         f"{observe!r}: {e}") from e
+    proto: VMPProgram = model.compile()
+
+    spec, f = _token_plate_spec(proto)
+    if proto.meta.get("pstar") is None:
+        raise ValueError("sharded SVI needs a '?' partition plate")
+    if spec.group is None or not np.array_equal(spec.prior_rows, proto_ids):
+        raise ValueError(
+            f"latent {spec.name} must live on the token plate directly "
+            f"under the partition plate (one prior row per document)")
+    if corpus.vocab > proto.dirichlets[f.dir_name].k:
+        raise ValueError(
+            f"corpus vocab {corpus.vocab} exceeds {f.dir_name}'s dimension "
+            f"{proto.dirichlets[f.dir_name].k}")
+    theta = proto.dirichlets[spec.prior_dir]
+    if theta.group_rows is None or theta.g != p:
+        raise ValueError(f"{spec.prior_dir} must have exactly one row per "
+                         f"partition group for sharded slicing")
+
+    n_docs, n_tokens = corpus.n_docs, corpus.n_tokens
+    dirichlets = {}
+    for name, d in proto.dirichlets.items():
+        if d.group_rows is None:
+            dirichlets[name] = d
+        else:
+            dirichlets[name] = dc.replace(
+                d, g=n_docs, group_rows=np.arange(n_docs, dtype=np.int32))
+    children = [dc.replace(f, values=None, n_z=n_tokens)]
+    latents = [dc.replace(spec, n=n_tokens, prior_rows=None,
+                          children=children, group=None)]
+
+    plate_sizes = dict(proto.plate_sizes)
+    token_plate = model.net.rvs[observe].plate
+    plate_sizes[token_plate.name] = n_tokens
+    plate_sizes[proto.meta["pstar"]] = n_docs
+    layout, off = {}, 0
+    for rv in proto.net.rvs.values():
+        cnt = plate_sizes.get(rv.plate.name, 1)
+        layout[rv.name] = (off, off + cnt)
+        off += cnt
+    meta = dict(proto.meta)
+    meta.update(n_observed=n_tokens, n_vertices=off, pstar_size=n_docs,
+                sharded=True, corpus_path=str(corpus.path))
+    return dc.replace(proto, dirichlets=dirichlets, latents=latents,
+                      vertex_layout=layout, plate_sizes=plate_sizes,
+                      meta=meta)
+
+
+def sharded_caps(template, corpus: ShardedCorpus, groups) -> dict[str, int]:
+    """The exact caps :func:`slice_sharded` would realize for ``groups``
+    under no padding policy — computed from ``corpus.lengths`` alone, with
+    **no shard I/O**.  The distributed batch builder probes per-shard caps
+    this way instead of slicing every sub-minibatch twice (which would
+    double the disk reads)."""
+    spec, f = _token_plate_spec(template)
+    groups = np.unique(np.asarray(groups, np.int64))
+    nz = int(corpus.lengths[groups].sum())
+    return {spec.prior_dir: max(len(groups), 1), spec.name: max(nz, 1),
+            f.x_name: max(nz, 1)}
+
+
+def slice_sharded(template, corpus: ShardedCorpus, groups, caps_fn=None):
+    """Sharded drop-in for :func:`repro.core.compiler.slice_arrays`.
+
+    Builds one minibatch's ``(arrays, dir_rows, caps, n_tokens)`` by reading
+    only the shards the batch's documents live in; every array (values,
+    prior rows, masks, sentinel padding, caps) is constructed to be bitwise
+    identical to what ``slice_arrays`` would produce from the equivalent
+    resident program — the property that makes sharded and resident SVI
+    bitwise-interchangeable (``tests/test_store.py``).
+    """
+    # the exact padding/mask conventions of the resident slicer — the
+    # bitwise contract lives in one place (compiler.py)
+    from repro.core.compiler import _padded, _slice_mask
+
+    spec, f = _token_plate_spec(template)
+    d_theta = template.dirichlets[spec.prior_dir]
+    # member-mask semantics of slice_arrays: ascending, duplicates collapse
+    groups = np.unique(np.asarray(groups, np.int64))
+    if len(groups) and (groups[0] < 0 or groups[-1] >= corpus.n_docs):
+        raise IndexError(f"group ids out of range [0, {corpus.n_docs})")
+    cap_of = caps_fn if caps_fn is not None else (lambda name, n: n)
+    always_mask = caps_fn is not None
+
+    def _mask(cap, n):
+        return _slice_mask(cap, n, always_mask)
+
+    arrays: dict[str, dict] = {}
+    dir_rows: dict[str, dict] = {}
+    caps: dict[str, int] = {}
+
+    g_b = len(groups)
+    cap_d = max(int(cap_of(spec.prior_dir, g_b)), 1)
+    rows = np.full(cap_d, d_theta.g, np.int32)      # sentinel: out-of-range
+    rows[:g_b] = groups
+    mask_d = np.zeros(cap_d, np.float32)
+    mask_d[:g_b] = 1.0
+    dir_rows[spec.prior_dir] = {"rows": rows, "mask": mask_d}
+    caps[spec.prior_dir] = cap_d
+
+    lengths_b = corpus.lengths[groups]
+    nz = int(lengths_b.sum())
+    capz = max(int(cap_of(spec.name, nz)), 1)
+    caps[spec.name] = capz
+    prior_rows = np.repeat(np.arange(g_b, dtype=np.int64),
+                           lengths_b).astype(np.int32)
+    arrays[spec.name] = {"prior_rows": _padded(prior_rows, capz),
+                         "mask": _mask(capz, nz)}
+
+    caps[f.x_name] = capz                           # zmap-None child: capt=capz
+    arrays[f.x_name] = {
+        "values": _padded(corpus.gather_tokens(groups).astype(np.int32),
+                          capz),
+        "zmap": None, "base": None, "mask": _mask(capz, nz)}
+    return arrays, dir_rows, caps, nz
+
+
+# ---------------------------------------------------------------------------
+# sampler + double-buffered prefetch
+# ---------------------------------------------------------------------------
+
+class _Prefetcher:
+    """Double-buffered background loader.
+
+    ``get(t)`` returns ``fn(t)``: from the prefetch buffer when the
+    prediction matched (the common sequential case — the worker built it
+    while the consumer was busy, e.g. while the jitted SVI step ran on
+    device), synchronously otherwise (first call, or a seek/resume jump).
+    Either way it then schedules ``fn(t + 1)`` on the worker thread, so at
+    most two batches' host buffers are ever live — the double buffer the
+    out-of-core working-set bound is stated in terms of.  Exceptions raised
+    by a prefetched ``fn`` are re-raised at the matching ``get``.
+    """
+
+    def __init__(self, fn: Callable[[int], object]):
+        self._fn = fn
+        self._thread: Optional[threading.Thread] = None
+        self._step: Optional[int] = None
+        self._box: Optional[tuple] = None
+
+    def get(self, t: int):
+        out = None
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+            kind, val = self._box if self._step == t else (None, None)
+            self._box = None
+            if kind == "exc":
+                raise val
+            out = val
+        if out is None:
+            out = self._fn(t)
+        self._schedule(t + 1)
+        return out
+
+    def _schedule(self, t: int):
+        def work():
+            try:
+                self._box = ("ok", self._fn(t))
+            except BaseException as e:          # re-raised at get(t)
+                self._box = ("exc", e)
+
+        self._step = t
+        self._thread = threading.Thread(target=work, daemon=True,
+                                        name="sharded-corpus-prefetch")
+        self._thread.start()
+
+    def close(self):
+        """Join the in-flight worker (if any) and drop its result."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._box = None
+        self._step = None
+
+
+@dataclasses.dataclass
+class ShardedMinibatchSampler:
+    """Minibatch schedule + host-batch loading over a :class:`ShardedCorpus`.
+
+    The *schedule* is delegated to an inner
+    :class:`~repro.data.pipeline.MinibatchSampler` over the same
+    ``(groups, batch_size, seed, shuffle)``, so ``batch_at(step)`` is — by
+    construction, not by parallel implementation — the identical pure
+    function of ``(seed, step)`` as the resident sampler's: resident and
+    sharded runs visit the same documents in the same order, and a resumed
+    run reproduces the remaining schedule.
+
+    ``loader(groups) -> batch`` builds one batch's host-side arrays from
+    the shards (numpy only — it runs on the prefetch thread);
+    :meth:`host_batch_at` serves it through a double-buffered prefetcher so
+    shard I/O overlaps the consumer's device step.  ``peak_buffer_bytes``
+    tracks the largest concurrent footprint of the (at most two) live host
+    batches — the resident working set the out-of-core benchmark reports.
+    """
+    corpus: ShardedCorpus
+    groups: np.ndarray
+    batch_size: int
+    seed: int = 0
+    shuffle: bool = True
+    loader: Optional[Callable[[np.ndarray], object]] = None
+    prefetch: bool = True
+
+    def __post_init__(self):
+        self._inner = MinibatchSampler(groups=self.groups,
+                                       batch_size=self.batch_size,
+                                       seed=self.seed, shuffle=self.shuffle)
+        self.groups = self._inner.groups
+        self._prefetcher = (_Prefetcher(self._load_at)
+                            if self.prefetch and self.loader else None)
+        self._live = [0, 0]                     # [consumer, prefetch] bytes
+        self.peak_buffer_bytes = 0
+
+    @property
+    def batches_per_epoch(self) -> int:
+        return self._inner.batches_per_epoch
+
+    def batch_at(self, step: int) -> np.ndarray:
+        """Sorted ``(<=batch_size,) int64`` doc ids of schedule slot
+        ``step`` — bitwise the resident :class:`MinibatchSampler` order."""
+        return self._inner.batch_at(step)
+
+    def _load_at(self, step: int):
+        batch = self.loader(self.batch_at(step))
+        nbytes = _tree_nbytes(batch)
+        # double-buffered: the previous batch is still live at the consumer
+        # while this one builds; without prefetch only one batch is ever
+        # resident at a time
+        self._live = ([self._live[1], nbytes] if self._prefetcher is not None
+                      else [0, nbytes])
+        self.peak_buffer_bytes = max(self.peak_buffer_bytes,
+                                     sum(self._live))
+        return batch
+
+    def host_batch_at(self, step: int):
+        """``loader(batch_at(step))``, prefetched: the call for ``step+1``
+        starts on the worker thread before this one returns."""
+        if self.loader is None:
+            raise ValueError("no loader bound; use batch_at()")
+        if self._prefetcher is None:
+            return self._load_at(step)
+        return self._prefetcher.get(step)
+
+    def close(self):
+        """Stop the prefetch worker (idempotent)."""
+        if self._prefetcher is not None:
+            self._prefetcher.close()
+
+
+def _tree_nbytes(obj) -> int:
+    """Total nbytes of the numpy leaves of a nested dict/list/tuple."""
+    if isinstance(obj, np.ndarray):
+        return obj.nbytes
+    if isinstance(obj, dict):
+        return sum(_tree_nbytes(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return sum(_tree_nbytes(v) for v in obj)
+    return 0
+
+
+__all__ = ["ShardedCorpus", "ShardedCorpusWriter", "ShardedMinibatchSampler",
+           "write_sharded_corpus", "sharded_template", "slice_sharded"]

@@ -19,6 +19,10 @@ from .vmp_zstep import zstep as _zstep_pallas
 
 
 def _backend() -> str:
+    """Which kernel implementation this process dispatches to: ``"pallas"``
+    (TPU, compiled), ``"pallas_interpret"`` (``REPRO_FORCE_PALLAS=1``:
+    kernel bodies under the interpreter — slow, for testing), or ``"ref"``
+    (pure-jnp oracles, the CPU/GPU default)."""
     if os.environ.get("REPRO_FORCE_PALLAS") == "1":
         return "pallas_interpret"
     try:
@@ -30,6 +34,11 @@ def _backend() -> str:
 
 
 def dirichlet_expectation(alpha: jax.Array) -> jax.Array:
+    """Rowwise expected log under a Dirichlet: ``digamma(alpha) -
+    digamma(alpha.sum(-1, keepdims=True))``.  ``alpha`` is a ``(G, K)``
+    float32 concentration table (other ranks fall back to the reference
+    path); the result matches ``alpha``'s shape and dtype.  This is the
+    Elog message table every VMP/SVI substep gathers from."""
     b = _backend()
     if b == "ref" or alpha.ndim != 2:
         return ref.dirichlet_expectation(alpha)
@@ -37,6 +46,11 @@ def dirichlet_expectation(alpha: jax.Array) -> jax.Array:
 
 
 def zstep(logits: jax.Array):
+    """Rowwise softmax with its normalizer: ``(r, lse)`` where ``r`` is the
+    ``(N, K)`` float32 responsibilities ``softmax(logits, -1)`` and ``lse``
+    the ``(N,)`` float32 ``logsumexp(logits, -1)`` (each row's exact ELBO
+    contribution at the coordinate optimum).  ``logits`` is ``(N, K)``
+    float32."""
     b = _backend()
     if b == "ref" or logits.ndim != 2:
         return ref.zstep(logits)
@@ -46,6 +60,18 @@ def zstep(logits: jax.Array):
 def zstats(elog_prior: jax.Array, prior_rows: jax.Array, children: tuple,
            zmask=None):
     """Fused token-plate substep: ``(lse_sum, prior_stats, child_stats)``.
+
+    Inputs: ``elog_prior`` — the ``(G, K)`` prior-Dirichlet Elog table
+    (float32, or the ``EngineConfig.elog_dtype`` narrow type);
+    ``prior_rows`` — ``(N,) int32`` row of each latent instance;
+    ``children`` — a tuple of :class:`ZChild` (each bundles a child's
+    ``(Gc, Kc)`` Elog table, ``(N,) int32`` observed values, row
+    base/stride, optional ``(N,) int32`` zmap and ``(N,) float32`` mask);
+    ``zmask`` — optional ``(n_latent,) float32`` validity mask.  Returns
+    ``lse_sum`` — scalar float32 sum of per-instance logsumexp (the token
+    plate's ELBO term); ``prior_stats`` — ``(G, K)`` float32
+    responsibility scatters onto the prior rows; ``child_stats`` — per
+    child a ``(Gc, Kc)`` float32 stats table.
 
     The hot path of every VMP/SVI iteration (see ``core/vmp.py:_step_body``).
     On TPU the fused Pallas kernel keeps responsibilities out of HBM; segment
@@ -64,6 +90,10 @@ def zstats(elog_prior: jax.Array, prior_rows: jax.Array, children: tuple,
 
 
 def flash_attention(q, k, v, *, causal: bool = True):
+    """Tiled attention ``softmax(q k^T / sqrt(Dh)) v`` without the (S, S)
+    score matrix in HBM.  ``q``/``k``/``v`` are ``(BH, S, Dh)`` — batch and
+    heads flattened together — bf16 or f32; returns ``q``'s shape and
+    dtype.  ``causal`` applies the autoregressive mask."""
     from .flash_attention import flash_attention as _fa_pallas
     b = _backend()
     if b == "ref":

@@ -84,6 +84,19 @@ def test_minibatch_sampler_validates():
         MinibatchSampler(groups=np.array([], np.int64), batch_size=2)
 
 
+def test_minibatch_sampler_rejects_oversized_batch():
+    """batch_size > n_groups would silently repeat short batches; it must
+    raise instead (the SVI driver clamps before constructing)."""
+    with pytest.raises(ValueError, match="exceeds"):
+        MinibatchSampler(groups=np.arange(5), batch_size=6)
+
+
+def test_minibatch_sampler_rejects_negative_step():
+    s = MinibatchSampler(groups=np.arange(5), batch_size=2)
+    with pytest.raises(ValueError, match="step"):
+        s.batch_at(-1)
+
+
 def test_holdout_split_partitions():
     train, hold = holdout_split(100, 0.15, seed=3)
     assert len(hold) == 15 and len(train) == 85
@@ -92,6 +105,34 @@ def test_holdout_split_partitions():
                                   np.arange(100))
     t2, h2 = holdout_split(100, 0.15, seed=3)
     np.testing.assert_array_equal(hold, h2)
+
+
+def test_holdout_split_rejects_degenerate_fracs():
+    """frac=0 / frac=1 / out-of-range fracs raise instead of returning a
+    silent empty split (which produced NaN heldout traces downstream)."""
+    for frac in (0.0, 1.0, -0.1, 1.5):
+        with pytest.raises(ValueError):
+            holdout_split(100, frac)
+
+
+def test_holdout_split_rejects_empty_sides():
+    with pytest.raises(ValueError, match="empty holdout"):
+        holdout_split(100, 0.001)         # rounds to zero held-out groups
+    with pytest.raises(ValueError, match="nothing"):
+        holdout_split(3, 0.9)             # rounds to zero training groups
+    with pytest.raises(ValueError, match="n_groups"):
+        holdout_split(0, 0.5)
+
+
+def test_svi_holdout_frac_zero_trains_on_everything(lda_program):
+    """SVI skips the split at holdout_frac=0: all groups train, heldout
+    ELBO is NaN rather than an exception."""
+    from repro.core.svi import SVI, SVIConfig
+    svi = SVI(lda_program, SVIConfig(batch_size=10, holdout_frac=0.0))
+    assert len(svi.train) == lda_program.meta["pstar_size"]
+    assert len(svi.holdout) == 0
+    state, _ = svi.fit(steps=1)
+    assert np.isnan(svi.heldout_elbo(state))
 
 
 def test_domain_reweighting():

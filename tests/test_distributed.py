@@ -31,6 +31,10 @@ def test_svi_distributed_parity(dist_output):
     assert "PASS svi_parity" in dist_output
 
 
+def test_svi_outofcore_parity(dist_output):
+    assert "PASS svi_outofcore_parity" in dist_output
+
+
 def test_vmp_collectives(dist_output):
     assert "PASS vmp_collectives" in dist_output
 
