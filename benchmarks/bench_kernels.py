@@ -42,17 +42,32 @@ def _lda_corpus(rng, n, k, d, v):
     return toks, docs, et, ep
 
 
-def _zstats_hbm_bytes(n, k, d, v):
+def _zstats_hbm_bytes(n, k, d, v, streamed=False):
     """Per-call HBM bytes of the token-plate substep (fp32, TPU model).
 
     unfused: 2 (N,K) gather reads + write/read logits + write r + 2 r
     re-reads (one per stats scatter) + stats accumulator traffic.
     fused:   token index streams (the tables are VMEM-resident and the
     (N, K) intermediates never leave VMEM) + one stats flush.
+    streamed (tables too large for VMEM): the over-budget table's tiles
+    are each read once per step and its accumulator flushed per tile —
+    same 2x table words — plus the trace-time bucketing permutation
+    (~1 extra token-stream round trip).  See docs/performance.md.
     """
     tables = d * k + k * v
     unfused = 4 * (7 * n * k + 2 * tables)
-    fused = 4 * (2 * n + 2 * tables)
+    fused = 4 * ((3 if streamed else 2) * n + 2 * tables)
+    return unfused, fused
+
+
+def _zmap_hbm_bytes(nt, nz, k, d, v):
+    """Two-phase segment-latent model: the unfused chain round-trips the
+    (N_token, K) message and gathered-responsibility arrays; the fused
+    kernel touches the token streams twice (logits phase, stats phase) and
+    round-trips only the (n_latent, K) logits/responsibilities."""
+    tables = d * k + k * v
+    unfused = 4 * (5 * nt * k + 4 * nz * k + 2 * tables)
+    fused = 4 * (4 * nt + 4 * nz * k + 2 * tables)
     return unfused, fused
 
 
@@ -99,5 +114,70 @@ def run(report):
                f"tokens_per_s={n/dt_u:.3e};hbm_bytes={b_u:.3e}", dims=dims)
         report(f"kernel_zstats_fused_{n}x{k}", dt_f * 1e6,
                f"tokens_per_s={n/dt_f:.3e};hbm_bytes={b_f:.3e};"
+               f"hbm_bytes_ratio={b_u/b_f:.1f};"
+               f"speedup_vs_unfused={dt_u/dt_f:.2f}", dims=dims)
+
+    # large-vocabulary LDA: phi's padded footprint (~2.5x _TABLE_BUDGET)
+    # takes the HBM-streamed kernel on TPU (tiled tables, bucketed tokens);
+    # this CPU path times the same fused semantics via the chunked oracle.
+    for n, k, d, v in ((400_000, 32, 2_000, 60_000),):
+        toks, docs, et, ep = _lda_corpus(rng, n, k, d, v)
+
+        def unfused(et, ep, docs, toks, d=d, v=v):
+            logits = et[docs] + ep[:, toks].T
+            r, lse = ref.zstep(logits)
+            ts = jnp.zeros((d, et.shape[1]), jnp.float32).at[docs].add(r)
+            ps = jax.ops.segment_sum(r, toks, num_segments=v).T
+            return lse.sum(), ts, ps
+
+        u = jax.jit(unfused)
+        f = jax.jit(lambda et, ep, docs, toks:
+                    ref.zstats(et, docs, (ref.ZChild(ep, toks, 1),)))
+        dt_u = _time(u, et, ep, docs, toks, iters=8)
+        dt_f = _time(f, et, ep, docs, toks, iters=8)
+        b_u, b_f = _zstats_hbm_bytes(n, k, d, v, streamed=True)
+        dims = {"n": n, "k": k, "d": d, "v": v}
+        report(f"kernel_zstats_unfused_largev_{n}x{v}", dt_u * 1e6,
+               f"tokens_per_s={n/dt_u:.3e};hbm_bytes={b_u:.3e}", dims=dims)
+        report(f"kernel_zstats_fused_largev_{n}x{v}", dt_f * 1e6,
+               f"tokens_per_s={n/dt_f:.3e};hbm_bytes={b_f:.3e};"
+               f"hbm_bytes_ratio={b_u/b_f:.1f};"
+               f"speedup_vs_unfused={dt_u/dt_f:.2f}", dims=dims)
+
+    # segment latents (SLDA-shaped zmap): on TPU the two-phase fused_zmap
+    # kernel; the unfused chain materializes the (N_token, K) messages and
+    # the r[zmap] expansion.
+    for nt, nz, k, d, v in ((400_000, 40_000, 32, 2_000, 10_000),):
+        toks = jnp.asarray(rng.integers(0, v, nt).astype(np.int32))
+        tsent = jnp.asarray(np.sort(rng.integers(0, nz, nt))
+                            .astype(np.int32))
+        sdoc = jnp.asarray(np.sort(rng.integers(0, d, nz))
+                           .astype(np.int32))
+        et = jnp.asarray(rng.normal(size=(d, k)).astype(np.float32))
+        ep = jnp.asarray(rng.normal(size=(k, v)).astype(np.float32))
+
+        def unfused(et, ep, sdoc, toks, tsent, nz=nz, d=d, v=v):
+            msgs = ep[:, toks].T                       # (N_token, K)
+            logits = et[sdoc] + jax.ops.segment_sum(msgs, tsent,
+                                                    num_segments=nz)
+            r, lse = ref.zstep(logits)
+            ts = jnp.zeros((d, et.shape[1]), jnp.float32).at[sdoc].add(r)
+            w = r[tsent]                               # (N_token, K)
+            ps = jax.ops.segment_sum(w, toks, num_segments=v).T
+            return lse.sum(), ts, ps
+
+        u = jax.jit(unfused)
+        f = jax.jit(lambda et, ep, sdoc, toks, tsent:
+                    ref.zstats(et, sdoc,
+                               (ref.ZChild(ep, toks, 1, zmap=tsent),)))
+        dt_u = _time(u, et, ep, sdoc, toks, tsent, iters=8)
+        dt_f = _time(f, et, ep, sdoc, toks, tsent, iters=8)
+        b_u, b_f = _zmap_hbm_bytes(nt, nz, k, d, v)
+        dims = {"nt": nt, "nz": nz, "k": k, "d": d, "v": v}
+        report(f"kernel_zstats_zmap_unfused_{nt}x{k}", dt_u * 1e6,
+               f"tokens_per_s={nt/dt_u:.3e};hbm_bytes={b_u:.3e}",
+               dims=dims)
+        report(f"kernel_zstats_zmap_fused_{nt}x{k}", dt_f * 1e6,
+               f"tokens_per_s={nt/dt_f:.3e};hbm_bytes={b_f:.3e};"
                f"hbm_bytes_ratio={b_u/b_f:.1f};"
                f"speedup_vs_unfused={dt_u/dt_f:.2f}", dims=dims)

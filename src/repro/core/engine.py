@@ -39,8 +39,10 @@ class EngineConfig:
     steps: int = 50
     seed: int = 0
     sharding: object = None         # ShardingPlan for vmp/svi; None = 1 device
-    elog_dtype: object = None       # e.g. "bfloat16": narrow Elog message
-                                    # tables in the token plate (f32 accum)
+    elog_dtype: object = None       # e.g. "bfloat16": narrow the token
+                                    # plate's message tables (f32 accum;
+                                    # concentrations — zstats fuses the
+                                    # Dirichlet expectation in-kernel)
     corpus: object = None           # svi only: a repro.data.ShardedCorpus
                                     # for out-of-core minibatches; the model
                                     # passed to fit() stays unobserved
@@ -48,10 +50,13 @@ class EngineConfig:
     batch_size: int = 64
     kappa: float = 0.7
     tau: float = 10.0
+    rho: Optional[float] = None     # constant step-size override, (0, 1]
     local_iters: int = 1
     pad_multiple: int = 256
     holdout_frac: float = 0.0
     holdout_every: int = 10
+    holdout_local_iters: int = 10
+    prefetch: bool = True           # out-of-core: double-buffered host I/O
     # gibbs
     burnin: Optional[int] = None    # default: steps // 2
     thin: int = 1
@@ -138,12 +143,33 @@ class SVIEngine(InferenceEngine):
         return _fit_svi(model, self.cfg, full_batch=False)
 
 
+def _svi_config(cfg: EngineConfig, full_batch: bool, n_groups: int):
+    """The :class:`~repro.core.svi.SVIConfig` an :class:`EngineConfig`
+    denotes.  Every SVI knob round-trips (``tests/test_engine.py`` sweeps
+    them); ``full_batch=True`` pins the knobs that make one SVI step an
+    exact full-batch VMP step (rho=1, |B| = all training groups, exact
+    padding, fixed order)."""
+    from .svi import SVIConfig
+    return SVIConfig(
+        batch_size=(n_groups or 1) if full_batch else cfg.batch_size,
+        kappa=cfg.kappa, tau=cfg.tau,
+        local_iters=cfg.local_iters,
+        pad_multiple=0 if full_batch else cfg.pad_multiple,
+        holdout_frac=cfg.holdout_frac, holdout_every=cfg.holdout_every,
+        holdout_local_iters=cfg.holdout_local_iters,
+        shuffle=not full_batch,
+        rho=1.0 if full_batch else cfg.rho,
+        prefetch=cfg.prefetch,
+        elog_dtype=cfg.elog_dtype,
+        seed=cfg.seed)
+
+
 def _fit_svi(model, cfg: EngineConfig, full_batch: bool) -> InferenceResult:
     """Shared SVI driver of the ``svi`` backend and the holdout-comparable
     full-batch reference (``full_batch=True``: rho=1, |B| = all training
     groups).  With ``cfg.corpus`` set, ``model`` stays unobserved and
     minibatches stream from the sharded corpus (out-of-core mode)."""
-    from .svi import SVI, SVIConfig
+    from .svi import SVI
     if cfg.corpus is not None and full_batch:
         raise ValueError("the full-batch reference needs a resident corpus")
     if cfg.corpus is None:
@@ -151,17 +177,8 @@ def _fit_svi(model, cfg: EngineConfig, full_batch: bool) -> InferenceResult:
         n_groups = target.meta.get("pstar_size") or 0
     else:
         target, n_groups = model, cfg.corpus.n_docs
-    scfg = SVIConfig(
-        batch_size=(n_groups or 1) if full_batch else cfg.batch_size,
-        kappa=cfg.kappa, tau=cfg.tau,
-        local_iters=cfg.local_iters,
-        pad_multiple=0 if full_batch else cfg.pad_multiple,
-        holdout_frac=cfg.holdout_frac, holdout_every=cfg.holdout_every,
-        shuffle=not full_batch,
-        rho=1.0 if full_batch else None,
-        elog_dtype=cfg.elog_dtype,
-        seed=cfg.seed)
-    svi = SVI(target, scfg, plan=cfg.sharding, corpus=cfg.corpus)
+    svi = SVI(target, _svi_config(cfg, full_batch, n_groups),
+              plan=cfg.sharding, corpus=cfg.corpus)
     try:
         state, history = svi.fit(steps=cfg.steps)
     finally:

@@ -23,7 +23,9 @@ from .vmp import VMPState, _program_arrays, _step_body, init_state
 
 def make_step(program: VMPProgram, donate: bool = True, elog_dtype=None):
     """``elog_dtype`` (e.g. ``jnp.bfloat16`` or ``"bfloat16"``) narrows the
-    Elog message tables the token plate reads — see ``_step_body``."""
+    message tables the token plate reads (the posterior concentration
+    tables, since ``zstats`` fuses the Dirichlet expectation into its
+    gathers) — see ``_step_body``."""
     arrays = _program_arrays(program)
     elog_dtype = _resolve_elog_dtype(elog_dtype)
 

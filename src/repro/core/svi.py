@@ -56,7 +56,10 @@ class SVIConfig:
     tau: float = 10.0              # Robbins-Monro delay (down-weights early steps)
     local_iters: int = 1           # local coordinate-ascent passes per batch
     pad_multiple: int = 256        # pad sliced axes up to a multiple (0 = exact)
-    elog_dtype: object = None      # narrow Elog message tables (e.g. "bfloat16")
+    elog_dtype: object = None      # narrow the token plate's message
+                                   # tables (e.g. "bfloat16"); since the
+                                   # fused-expectation change these are the
+                                   # posterior concentration tables
     holdout_frac: float = 0.0      # fraction of groups held out for ELBO eval
     holdout_every: int = 10        # evaluate held-out ELBO every k steps
     holdout_local_iters: int = 10  # local passes when evaluating held-out docs
@@ -70,14 +73,29 @@ class SVIConfig:
     def __post_init__(self):
         if self.rho is None and not (0.5 < self.kappa <= 1.0):
             raise ValueError(f"kappa must be in (0.5, 1], got {self.kappa}")
+        if self.rho is not None and not (0.0 < self.rho <= 1.0):
+            raise ValueError(f"constant rho must be in (0, 1] — rho > 1 "
+                             f"overshoots the natural-gradient step and "
+                             f"diverges silently — got {self.rho}")
         if self.tau < 0:
             raise ValueError("tau must be >= 0")
 
 
 def robbins_monro(t: int, tau: float = 10.0, kappa: float = 0.7) -> float:
-    """Step size rho_t = (tau + t) ** -kappa; rho_0 <= 1, sum rho = inf,
-    sum rho^2 < inf — the conditions for SVI convergence."""
-    return float((tau + t) ** (-kappa))
+    """Step size rho_t = min((tau + t) ** -kappa, 1.0); sum rho = inf,
+    sum rho^2 < inf — the conditions for SVI convergence.
+
+    The clamp makes the ``rho_t <= 1`` guarantee real: any ``tau < 1``
+    yields ``(tau + 0) ** -kappa > 1`` at the first step, and ``tau = 0``
+    (which ``SVIConfig`` accepts) used to return ``inf`` — one such step
+    replaces the posterior state with ``inf * target`` and destroys the
+    fit.  ``rho_0 = 1`` (a pure natural-gradient step to the first batch's
+    target) is the correct degenerate limit instead.
+    """
+    base = tau + t
+    if base <= 0:
+        return 1.0
+    return float(min(base ** (-kappa), 1.0))
 
 
 # ---------------------------------------------------------------------------

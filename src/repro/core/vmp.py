@@ -117,17 +117,21 @@ def _step_body(program: VMPProgram, arrays: dict, state: VMPState,
     The token plate runs through the fused ``kops.zstats`` substep: per
     latent, the Elog gathers, softmax/logsumexp, and sufficient-statistics
     scatters happen in one streaming pass, so the (N, K) responsibilities
-    are never materialized (see docs/performance.md).  ``elog_dtype`` (e.g.
-    ``jnp.bfloat16``) optionally narrows the Elog *message tables* the token
-    plate gathers from — halving their HBM read traffic — while softmax,
-    stats accumulation, and the Dirichlet ELBO terms stay f32.
+    are never materialized (see docs/performance.md).  The substep is fed
+    the posterior *concentrations* (``tables="alpha"``): on TPU the
+    ``dirichlet_expectation`` is fused into the gather kernels, so no Elog
+    message table is materialized in HBM for the token plate at all —
+    statics and the Dirichlet ELBO terms compute their own expectations
+    (element-wise reductions XLA fuses without a round trip).
+    ``elog_dtype`` (e.g. ``jnp.bfloat16``) optionally narrows the
+    concentration tables the token plate reads — halving their HBM traffic
+    — while the in-kernel digamma, softmax, stats accumulation, and the
+    Dirichlet ELBO terms stay f32.
     """
     from repro.kernels import ops as kops
 
-    elog = {n: kops.dirichlet_expectation(p)
-            for n, p in state.posteriors.items()}
-    emsg = elog if elog_dtype is None else \
-        {n: e.astype(elog_dtype) for n, e in elog.items()}
+    amsg = state.posteriors if elog_dtype is None else \
+        {n: p.astype(elog_dtype) for n, p in state.posteriors.items()}
 
     elbo = jnp.zeros((), jnp.float32)
     stats = {n: jnp.zeros((d.g, d.k), jnp.float32)
@@ -135,7 +139,7 @@ def _step_body(program: VMPProgram, arrays: dict, state: VMPState,
 
     for spec in program.latents:
         children = tuple(
-            kops.ZChild(elog=emsg[f.dir_name],
+            kops.ZChild(elog=amsg[f.dir_name],
                         values=arrays[f.x_name]["values"],
                         stride=f.stride,
                         zmap=arrays[f.x_name].get("zmap"),
@@ -143,8 +147,8 @@ def _step_body(program: VMPProgram, arrays: dict, state: VMPState,
                         mask=arrays[f.x_name].get("mask"))
             for f in spec.children)
         lse_sum, pstats, cstats = kops.zstats(
-            emsg[spec.prior_dir], arrays[spec.name]["prior_rows"], children,
-            zmask=arrays[spec.name].get("mask"))
+            amsg[spec.prior_dir], arrays[spec.name]["prior_rows"], children,
+            zmask=arrays[spec.name].get("mask"), tables="alpha")
         elbo = elbo + lse_sum
         # prior-factor stats (theta <- z)
         stats[spec.prior_dir] = stats[spec.prior_dir] + pstats
@@ -152,10 +156,14 @@ def _step_body(program: VMPProgram, arrays: dict, state: VMPState,
         for f, cs in zip(spec.children, cstats):
             stats[f.dir_name] = stats[f.dir_name] + cs
 
+    selog: dict[str, jax.Array] = {}   # statics' Elog tables, on demand
     for s in program.statics:
         a = arrays[s.x_name]
         d = program.dirichlets[s.dir_name]
-        e = elog[s.dir_name][a["rows"], a["values"]]
+        if s.dir_name not in selog:
+            selog[s.dir_name] = kops.dirichlet_expectation(
+                state.posteriors[s.dir_name])
+        e = selog[s.dir_name][a["rows"], a["values"]]
         ones = jnp.ones_like(a["values"], jnp.float32)
         if a.get("mask") is not None:
             e = e * a["mask"]
@@ -170,7 +178,7 @@ def _step_body(program: VMPProgram, arrays: dict, state: VMPState,
     for name, d in program.dirichlets.items():
         prior = jnp.asarray(d.prior)[None, :]
         term = dists.dirichlet_elbo_term(prior, state.posteriors[name],
-                                         elog[name])
+                                         selog.get(name))
         st = stats[name]
         if axis_names and name not in local_dirs:
             st = jax.lax.psum(st, axis_names)

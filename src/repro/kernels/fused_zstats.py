@@ -19,29 +19,59 @@ Implementation notes:
 
   - Gathers and scatters are expressed as one-hot matmuls so they run on the
     MXU (TPU has no vector gather from VMEM); the one-hot lane dimension is
-    the table's row count, so every Elog table must be VMEM-resident.  The
-    dispatch layer (``ops.zstats``) falls back to the chunked ``ref`` oracle
-    when the tables exceed the VMEM budget or a child carries a ``zmap``
-    (segment latents need a cross-token reduction before the softmax).
-  - The stats outputs use a constant index map: sequential grid steps revisit
-    the same VMEM block, which is the canonical Pallas accumulator pattern
-    (initialized at program_id 0, flushed to HBM once at the end).
-  - Elog tables may arrive in bf16 (the engine's ``elog_dtype`` mode);
+    the resident extent of the table being gathered.
+  - **Streamed tables** (this file's large-vocabulary path): a table whose
+    resident footprint exceeds ``_TABLE_BUDGET`` is tiled along its gather
+    axis (rows for the prior, the value axis for a specialized child) and
+    the tiles are pipelined HBM -> VMEM across the token-block grid.  At
+    trace time the tokens are bucketed by table tile (a stable sort plus
+    per-tile padding to whole blocks), so every token block gathers only
+    from its resident tile; the per-block tile index is fed through
+    ``PrefetchScalarGridSpec`` scalar prefetch, and Pallas's grid pipeline
+    double-buffers the tile copies (consecutive blocks on the same tile
+    skip the copy).  The streamed table's stats accumulator is tiled the
+    same way: each tile's accumulator block is initialized at the tile's
+    first token block, accumulated across the tile's (contiguous) run of
+    blocks, and flushed to HBM once when the grid moves on.
+  - **Fused ``dirichlet_expectation``** (``tables="alpha"``): the inputs are
+    Dirichlet concentration tables, and E[log theta] is computed in-kernel
+    (digamma recurrence + asymptotic series, shared with
+    ``kernels/dirichlet_expectation.py``) into a VMEM scratch buffer — once
+    at the first grid step for resident tables, once per tile for the
+    streamed table.  This drops one full Elog-table materialization (an HBM
+    write + re-read) per Dirichlet per VMP step.  For a table streamed
+    along its value axis the Dirichlet row sums span all tiles, so the
+    per-row ``digamma(sum_k alpha)`` vector is precomputed outside (see
+    :func:`rowsum_digamma`, bitwise-matching the standalone kernel).
+  - The stats outputs use a constant index map: sequential grid steps
+    revisit the same VMEM block, which is the canonical Pallas accumulator
+    pattern (initialized at program_id 0, flushed to HBM once at the end).
+  - Tables may arrive in bf16 (the engine's ``elog_dtype`` mode);
     accumulation is always f32 (tables are upcast after the VMEM load).
+
+Segment latents (a child with a ``zmap``) take the two-phase kernel in
+``kernels/fused_zmap.py``; :func:`fusable` delegates to its budget check.
+The per-block math (:func:`_block_step` and friends) is shared with
+``ref.zstats_blocked``, the block-structured oracle that is the kernels'
+bitwise parity target.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from .dirichlet_expectation import _digamma
 from .ref import ZChild
 
 _VMEM_BUDGET = 2 * 1024 * 1024        # bytes for the largest per-block tensor
 _TABLE_BUDGET = 8 * 1024 * 1024       # resident Elog tables + accumulators
+_TILE_BUDGET = 1 * 1024 * 1024        # bytes per streamed-table tile
 _LANE = 128
 _SUB = 8
 _NEG = -1e30
@@ -51,187 +81,563 @@ def _pad_to(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def _block_tokens(block_n: Optional[int], *dims: int) -> int:
+    """Tokens per grid block: the largest per-block (bn, max(dims)) f32
+    temporary must fit ``_VMEM_BUDGET``.  The one block-size formula for
+    every kernel in this package (flat, streamed, and the zmap phases)."""
+    m = max(dims)
+    return block_n or max(_SUB, min(512, _VMEM_BUDGET // (4 * m)
+                                    // _SUB * _SUB))
+
+
 def _onehot(idx, width: int):
     """(bn,) int32 -> (bn, width) f32 one-hot via 2-D iota (TPU-legal)."""
     cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], width), 1)
     return (idx[:, None] == cols).astype(jnp.float32)
 
 
-def _kernel(*refs, k: int, meta: tuple):
-    """meta: per child (specialized, stride, has_base, has_mask)."""
-    ptab_ref, prow_ref, zm_ref = refs[0], refs[1], refs[2]
-    pos = 3
-    child_in = []
-    for (_, _, has_base, has_mask) in meta:
-        tab_ref, vals_ref = refs[pos], refs[pos + 1]
-        pos += 2
-        base_ref = mask_ref = None
-        if has_base:
-            base_ref = refs[pos]
-            pos += 1
-        if has_mask:
-            mask_ref = refs[pos]
-            pos += 1
-        child_in.append((tab_ref, vals_ref, base_ref, mask_ref))
-    lse_ref, pstats_ref = refs[pos], refs[pos + 1]
-    cstat_refs = refs[pos + 2:]
+# ---------------------------------------------------------------------------
+# table resolution: Elog values from either Elog or concentration tables
+# ---------------------------------------------------------------------------
 
-    i = pl.program_id(0)
-    ptab = ptab_ref[...].astype(jnp.float32)          # (gpp, kp)
-    gpp, kp = ptab.shape
-    rows = prow_ref[...]
-    bn = rows.shape[0]
-    oh_p = _onehot(rows, gpp)                          # (bn, gpp)
+def _elog_from_alpha(a, lane_pad: int):
+    """E[log theta] of a concentration block whose lane padding holds 1.0:
+    the padded row sum minus the pad count is the true row sum (bitwise the
+    standalone ``dirichlet_expectation`` kernel's computation)."""
+    rs = a.sum(axis=-1, keepdims=True) - float(lane_pad)
+    return _digamma(a) - _digamma(rs)
+
+
+def rowsum_digamma(alpha: jax.Array) -> jax.Array:
+    """``digamma(sum_k alpha)`` per row, replicating the standalone Pallas
+    kernel's padded-lane row sum op-for-op so the fused ``tables="alpha"``
+    path stays bitwise equal to the two-call composition."""
+    kf = alpha.shape[1]
+    kfp = max(_LANE, _pad_to(kf, _LANE))
+    a = jnp.pad(alpha.astype(jnp.float32), ((0, 0), (0, kfp - kf)),
+                constant_values=1.0)
+    return _digamma(a.sum(axis=-1) - float(kfp - kf))
+
+
+# ---------------------------------------------------------------------------
+# per-block math, shared by the Pallas kernels and ref.zstats_blocked
+# ---------------------------------------------------------------------------
+
+def _prior_block(ptab, rows, k: int):
+    """Prior gather + padded-lane kill -> (oh_p, lane, logits)."""
+    oh_p = _onehot(rows, ptab.shape[0])
     logits = jnp.dot(oh_p, ptab, preferred_element_type=jnp.float32)
-    lane = jax.lax.broadcasted_iota(jnp.int32, (bn, kp), 1)
-    logits = logits + jnp.where(lane < k, 0.0, _NEG)   # kill padded lanes
+    lane = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = logits + jnp.where(lane < k, 0.0, _NEG)
+    return oh_p, lane, logits
 
-    # gather phase: add every child factor's Elog message rows
-    for (tab_ref, vals_ref, base_ref, mask_ref), \
-            (specialized, stride, _, _) in zip(child_in, meta):
-        tab = tab_ref[...].astype(jnp.float32)         # (gfp, kfp)
-        vals = vals_ref[...]
-        oh_v = _onehot(vals, tab.shape[1])             # (bn, kfp)
-        if specialized:                                # row IS the topic
-            e = jnp.dot(oh_v, tab.T, preferred_element_type=jnp.float32)
-        else:                                          # row = base + stride*z
-            base = base_ref[...] if base_ref is not None \
-                else jnp.zeros_like(vals)
-            e = jnp.zeros((bn, kp), jnp.float32)
-            for kk in range(k):
-                oh_r = _onehot(base + stride * kk, tab.shape[0])
-                g = jnp.dot(oh_r, tab, preferred_element_type=jnp.float32)
-                e = e + jnp.where(lane == kk,
-                                  (g * oh_v).sum(-1)[:, None], 0.0)
-        if mask_ref is not None:
-            e = e * mask_ref[...][:, None]
-        logits = logits + e
 
-    # softmax + logsumexp, block-local; padded rows carry zmask 0
+def _child_message(tab, vals, base, mask, k: int, lane,
+                   specialized: bool, stride: int):
+    """One child factor's Elog message rows for a token block -> (bn, kp)."""
+    oh_v = _onehot(vals, tab.shape[1])
+    if specialized:                                # row IS the topic
+        e = jnp.dot(oh_v, tab.T, preferred_element_type=jnp.float32)
+    else:                                          # row = base + stride*z
+        b = base if base is not None else jnp.zeros_like(vals)
+        e = jnp.zeros(lane.shape, jnp.float32)
+        for kk in range(k):
+            oh_r = _onehot(b + stride * kk, tab.shape[0])
+            g = jnp.dot(oh_r, tab, preferred_element_type=jnp.float32)
+            e = e + jnp.where(lane == kk,
+                              (g * oh_v).sum(-1)[:, None], 0.0)
+    if mask is not None:
+        e = e * mask[:, None]
+    return e
+
+
+def _softmax_block(logits, zm):
+    """Masked softmax + summed logsumexp of one block -> (r, lse_sum)."""
     m = logits.max(axis=-1, keepdims=True)
     ex = jnp.exp(logits - m)
     s = ex.sum(axis=-1, keepdims=True)
-    zm = zm_ref[...]
     r = ex / s * zm[:, None]
-    lse_ref[0] = jnp.sum((m[:, 0] + jnp.log(s[:, 0])) * zm)
-
-    @pl.when(i == 0)
-    def _init():
-        pstats_ref[...] = jnp.zeros(pstats_ref.shape, pstats_ref.dtype)
-        for cref in cstat_refs:
-            cref[...] = jnp.zeros(cref.shape, cref.dtype)
-
-    # scatter phase: one-hot-transposed matmuls into the accumulators
-    pstats_ref[...] += jnp.dot(oh_p.T, r, preferred_element_type=jnp.float32)
-    for (tab_ref, vals_ref, base_ref, mask_ref), cref, \
-            (specialized, stride, _, _) in zip(child_in, cstat_refs, meta):
-        vals = vals_ref[...]
-        oh_v = _onehot(vals, cref.shape[1])
-        w = r if mask_ref is None else r * mask_ref[...][:, None]
-        if specialized:
-            cref[...] += jnp.dot(w.T, oh_v,
-                                 preferred_element_type=jnp.float32)
-        else:
-            base = base_ref[...] if base_ref is not None \
-                else jnp.zeros_like(vals)
-            acc = jnp.zeros(cref.shape, jnp.float32)
-            for kk in range(k):
-                oh_r = _onehot(base + stride * kk, cref.shape[0])
-                acc = acc + jnp.dot(oh_r.T, oh_v * w[:, kk:kk + 1],
-                                    preferred_element_type=jnp.float32)
-            cref[...] += acc
+    lse = jnp.sum((m[:, 0] + jnp.log(s[:, 0])) * zm)
+    return r, lse
 
 
-def fusable(elog_prior, children) -> bool:
-    """True when the fused kernel supports this latent: no segment (zmap)
-    children and all Elog tables + accumulators VMEM-resident."""
+def _child_scatter(r, vals, base, mask, shape: tuple, k: int,
+                   specialized: bool, stride: int):
+    """Responsibility-weighted count scatter of one block -> ``shape``."""
+    oh_v = _onehot(vals, shape[1])
+    w = r if mask is None else r * mask[:, None]
+    if specialized:
+        return jnp.dot(w.T, oh_v, preferred_element_type=jnp.float32)
+    b = base if base is not None else jnp.zeros_like(vals)
+    acc = jnp.zeros(shape, jnp.float32)
+    for kk in range(k):
+        oh_r = _onehot(b + stride * kk, shape[0])
+        acc = acc + jnp.dot(oh_r.T, oh_v * w[:, kk:kk + 1],
+                            preferred_element_type=jnp.float32)
+    return acc
+
+
+def _block_step(ptab, tabs, rows, vals, bases, masks, zm, k: int,
+                meta: tuple, extra=None):
+    """One token block end-to-end: (lse_sum, pstats_delta, cstat_deltas, r).
+
+    All tables arrive resolved to f32 Elog values (full for resident
+    tables, the block's tile for a streamed one) and all index streams
+    arrive localized to those tables.  ``extra`` optionally adds
+    pre-accumulated logits (the zmap kernel's phase-one output).
+    """
+    oh_p, lane, logits = _prior_block(ptab, rows, k)
+    if extra is not None:
+        logits = logits + extra
+    for tab, v, b, mk, (specialized, stride, _, _) in \
+            zip(tabs, vals, bases, masks, meta):
+        logits = logits + _child_message(tab, v, b, mk, k, lane,
+                                         specialized, stride)
+    r, lse = _softmax_block(logits, zm)
+    pd = jnp.dot(oh_p.T, r, preferred_element_type=jnp.float32)
+    cds = [_child_scatter(r, v, b, mk, tab.shape, k, specialized, stride)
+           for tab, v, b, mk, (specialized, stride, _, _) in
+           zip(tabs, vals, bases, masks, meta)]
+    return lse, pd, cds, r
+
+
+# ---------------------------------------------------------------------------
+# planning: resident budget, streamed-table selection, token bucketing
+# ---------------------------------------------------------------------------
+
+class _Plan(NamedTuple):
+    """Static layout of one fused zstats call."""
+    k: int
+    kp: int
+    gp: int
+    gpp: int                           # prior rows (padded; n_tiles*tl if streamed)
+    child_dims: tuple                  # per child (gf, kf, gfp, kfp)
+    target: object                     # None | "prior" | child index
+    tl: int                            # tile length along the streamed axis
+    n_tiles: int
+    bn: int                            # tokens per block
+    mode: str                          # "elog" | "alpha"
+
+
+def _plan(table_prior, children, tables: str = "elog",
+          block_n: Optional[int] = None) -> Optional[_Plan]:
+    """Choose the resident/streamed layout, or ``None`` when not fusable.
+
+    Budget accounting is in padded f32 words; every resident table costs
+    table + stats accumulator (+ Elog scratch under ``tables="alpha"``).
+    At most one over-budget table can be streamed, and only along an axis
+    the per-token gather indexes directly: the prior's row axis
+    (``prior_rows``) or a specialized child's value axis (``values``).
+    """
     if any(c.zmap is not None for c in children):
-        return False
-    k = elog_prior.shape[1]
+        return None
+    k = table_prior.shape[1]
     kp = _pad_to(max(k, 1), _LANE)
-    byt = 2 * 4 * _pad_to(elog_prior.shape[0], _LANE) * kp
-    for c in children:
-        gf, kf = c.elog.shape
-        gfp = kp if c.specialized else _pad_to(gf, _LANE)
-        byt += 2 * 4 * gfp * _pad_to(kf, _LANE)
-    return byt <= _TABLE_BUDGET
-
-
-def zstats(elog_prior: jax.Array, prior_rows: jax.Array, children: tuple,
-           zmask=None, *, block_n: int | None = None,
-           interpret: bool = False):
-    """Pallas-backed fused z-substep; matches ``ref.zstats`` (flat case)."""
-    if any(c.zmap is not None for c in children):
-        raise ValueError("segment latents (zmap) are not fusable; "
-                         "use ref.zstats")
-    n = prior_rows.shape[0]
-    gp, k = elog_prior.shape
-    kp = _pad_to(max(k, 1), _LANE)
+    gp = table_prior.shape[0]
     gpp = _pad_to(max(gp, 1), _LANE)
+    factor = 3 if tables == "alpha" else 2
 
-    meta, tabs, tab_dims = [], [], []
+    child_dims = []
     for c in children:
         gf, kf = c.elog.shape
-        specialized = c.specialized
-        if specialized and gf != k:
+        if c.specialized and gf != k:
             raise ValueError(f"specialized child table has {gf} rows, "
                              f"expected K={k}")
-        gfp = kp if specialized else _pad_to(max(gf, 1), _LANE)
+        gfp = kp if c.specialized else _pad_to(max(gf, 1), _LANE)
         kfp = _pad_to(max(kf, 1), _LANE)
-        tabs.append(jnp.pad(c.elog, ((0, gfp - gf), (0, kfp - kf))))
-        tab_dims.append((gf, kf, gfp, kfp))
-        meta.append((specialized, int(c.stride),
-                     c.base is not None, c.mask is not None))
-    meta = tuple(meta)
+        child_dims.append((gf, kf, gfp, kfp))
 
-    maxdim = max([gpp, kp] + [max(g, kf) for (_, _, g, kf) in tab_dims])
-    bn = block_n or max(_SUB, min(512, _VMEM_BUDGET // (4 * maxdim)
-                                  // _SUB * _SUB))
-    np_ = _pad_to(max(n, 1), bn)
-    nblocks = np_ // bn
+    entries = [("prior", gpp * kp, True)]
+    for ci, (c, (_, _, gfp, kfp)) in enumerate(zip(children, child_dims)):
+        entries.append((ci, gfp * kfp, c.specialized))
+    total = factor * 4 * sum(w for _, w, _ in entries)
+
+    target, tl, n_tiles = None, 0, 1
+    if total > _TABLE_BUDGET:
+        cands = [e for e in entries if e[2]]
+        if not cands:
+            return None
+        big = max(cands, key=lambda e: e[1])
+        rest = total - factor * 4 * big[1]
+        # tile double-buffer + tiled accumulator + Elog scratch <= 4 tiles
+        if rest > _TABLE_BUDGET - 4 * _TILE_BUDGET:
+            return None
+        target = big[0]
+        if target == "prior":
+            tl = _TILE_BUDGET // (4 * kp) // _SUB * _SUB
+            if tl < _SUB:              # one row wider than a tile's budget
+                return None
+            n_tiles = -(-gpp // tl)
+            gpp = n_tiles * tl
+        else:
+            gf, kf, gfp, kfp = child_dims[target]
+            tl = _TILE_BUDGET // (4 * gfp) // _LANE * _LANE
+            if tl < _LANE:             # one column taller than the budget
+                return None
+            n_tiles = -(-kfp // tl)
+            child_dims[target] = (gf, kf, gfp, n_tiles * tl)
+
+    dims = [kp, tl if target == "prior" else gpp]
+    for ci, (_, _, gfp, kfp) in enumerate(child_dims):
+        dims += [gfp, tl if target == ci else kfp]
+    bn = _block_tokens(block_n, *dims)
+    return _Plan(k, kp, gp, gpp, tuple(child_dims), target, tl, n_tiles,
+                 bn, tables)
+
+
+def _bucket(key, n: int, tl: int, n_tiles: int, bn: int):
+    """Bucket tokens by streamed-table tile, padding each bucket to whole
+    ``bn`` blocks (at least one per tile, so every accumulator tile is
+    visited and flushed).  Pure trace-time jnp: returns ``(src, slot_tile,
+    blk_tile)`` where ``src`` maps padded slots to source tokens (-1 =
+    padding), over the static padded length ``(ceil(n/bn) + n_tiles)*bn``.
+    """
+    tid = (key.astype(jnp.int32) // tl).astype(jnp.int32)
+    order = jnp.argsort(tid)                       # stable
+    cnt = jnp.bincount(tid, length=n_tiles)
+    pcnt = jnp.maximum(-(-cnt // bn), 1) * bn
+    cum_p = jnp.cumsum(pcnt)
+    off = cum_p - pcnt                             # padded bucket starts
+    cstart = jnp.cumsum(cnt) - cnt                 # sorted bucket starts
+    tid_s = tid[order]
+    pos = off[tid_s] + (jnp.arange(n) - cstart[tid_s])
+    np_ = (-(-n // bn) + n_tiles) * bn
+    src = jnp.full((np_,), -1, jnp.int32).at[pos].set(order.astype(jnp.int32))
+    slot_tile = jnp.clip(jnp.searchsorted(cum_p, jnp.arange(np_),
+                                          side="right"),
+                         0, n_tiles - 1).astype(jnp.int32)
+    return src, slot_tile, slot_tile[::bn]
+
+
+def fusable(table_prior, children, tables: str = "elog",
+            n_latent: int | None = None) -> bool:
+    """True when the fused kernels support this latent.  Large tables are
+    no longer rejected — one over-budget table is streamed tile-by-tile
+    when the per-token gather indexes it directly (the prior, or a
+    specialized child such as a large-vocabulary LDA ``phi``); segment
+    (zmap) children route to the two-phase ``fused_zmap`` kernel, whose
+    budget check needs ``n_latent`` (the latent instance count,
+    ``prior_rows.shape[0]`` — ``ops.zstats`` supplies it).  What remains
+    unfusable: several over-budget tables at once, an over-budget table
+    only reachable through a strided row computation, or a single row /
+    column wider than a stream tile."""
+    if any(c.zmap is not None for c in children):
+        from .fused_zmap import fusable_zmap
+        return fusable_zmap(table_prior, children, tables,
+                            n_latent=n_latent)
+    return _plan(table_prior, children, tables) is not None
+
+
+# ---------------------------------------------------------------------------
+# the kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(*refs, plan: _Plan, meta: tuple, lane_pads: tuple,
+            has_extra: bool = False, emit_r: bool = False):
+    """meta: per child (specialized, stride, has_base, has_mask).
+
+    Ref layout: ``blk_tile`` (scalar prefetch), prior table, prior rows,
+    zmask, per child (table, values[, base][, mask][, dg0]), optional extra
+    logits; outputs lse, prior stats, per-child stats, optional r; then in
+    ``tables="alpha"`` mode one f32 Elog scratch per table.
+    """
+    n_child = len(meta)
+    pos = 0
+    bt_ref = refs[pos]; pos += 1
+    ptab_ref = refs[pos]; pos += 1
+    prow_ref, zm_ref = refs[pos], refs[pos + 1]; pos += 2
+    child_in = []
+    for ci, (_, _, has_base, has_mask) in enumerate(meta):
+        tab_ref, vals_ref = refs[pos], refs[pos + 1]; pos += 2
+        base_ref = mask_ref = dg0_ref = None
+        if has_base:
+            base_ref = refs[pos]; pos += 1
+        if has_mask:
+            mask_ref = refs[pos]; pos += 1
+        if plan.mode == "alpha" and plan.target == ci:
+            dg0_ref = refs[pos]; pos += 1
+        child_in.append((tab_ref, vals_ref, base_ref, mask_ref, dg0_ref))
+    extra_ref = None
+    if has_extra:
+        extra_ref = refs[pos]; pos += 1
+    lse_ref, pstats_ref = refs[pos], refs[pos + 1]; pos += 2
+    cstat_refs = refs[pos:pos + n_child]; pos += n_child
+    r_ref = None
+    if emit_r:
+        r_ref = refs[pos]; pos += 1
+    scratch = refs[pos:]
+
+    i = pl.program_id(0)
+    cur = bt_ref[i]
+    prev = bt_ref[jnp.maximum(i - 1, 0)]
+    tile_first = jnp.logical_or(i == 0, prev != cur)
+
+    @pl.when(i == 0)
+    def _init_resident():
+        if plan.target != "prior":
+            pstats_ref[...] = jnp.zeros(pstats_ref.shape, pstats_ref.dtype)
+        for ci, cref in enumerate(cstat_refs):
+            if plan.target != ci:
+                cref[...] = jnp.zeros(cref.shape, cref.dtype)
+        if plan.mode == "alpha":
+            if plan.target != "prior":
+                scratch[0][...] = _elog_from_alpha(
+                    ptab_ref[...].astype(jnp.float32), lane_pads[0])
+            for ci, (tab_ref, *_) in enumerate(child_in):
+                if plan.target != ci:
+                    scratch[1 + ci][...] = _elog_from_alpha(
+                        tab_ref[...].astype(jnp.float32), lane_pads[1 + ci])
+
+    if plan.target is not None:
+        @pl.when(tile_first)
+        def _init_tile():
+            if plan.target == "prior":
+                pstats_ref[...] = jnp.zeros(pstats_ref.shape,
+                                            pstats_ref.dtype)
+                if plan.mode == "alpha":
+                    scratch[0][...] = _elog_from_alpha(
+                        ptab_ref[...].astype(jnp.float32), lane_pads[0])
+            else:
+                ci = plan.target
+                cref = cstat_refs[ci]
+                cref[...] = jnp.zeros(cref.shape, cref.dtype)
+                if plan.mode == "alpha":
+                    tab_ref, _, _, _, dg0_ref = child_in[ci]
+                    scratch[1 + ci][...] = \
+                        _digamma(tab_ref[...].astype(jnp.float32)) \
+                        - dg0_ref[...]
+
+    def table(idx, ref):
+        if plan.mode == "alpha":
+            return scratch[idx][...]
+        return ref[...].astype(jnp.float32)
+
+    ptab = table(0, ptab_ref)
+    rows = prow_ref[...]
+    if plan.target == "prior":
+        rows = rows - cur * plan.tl
+    tabs, vals, bases, masks = [], [], [], []
+    for ci, (tab_ref, vals_ref, base_ref, mask_ref, _) in \
+            enumerate(child_in):
+        tabs.append(table(1 + ci, tab_ref))
+        v = vals_ref[...]
+        if plan.target == ci:
+            v = v - cur * plan.tl
+        vals.append(v)
+        bases.append(None if base_ref is None else base_ref[...])
+        masks.append(None if mask_ref is None else mask_ref[...])
+
+    extra = None if extra_ref is None else extra_ref[...]
+    lse, pd, cds, r = _block_step(ptab, tabs, rows, vals, bases, masks,
+                                  zm_ref[...], plan.k, meta, extra)
+    lse_ref[0] = lse
+    pstats_ref[...] += pd
+    for cref, cd in zip(cstat_refs, cds):
+        cref[...] += cd
+    if r_ref is not None:
+        r_ref[...] = r
+
+
+# ---------------------------------------------------------------------------
+# layout + call assembly (shared with ref.zstats_blocked)
+# ---------------------------------------------------------------------------
+
+class _Layout(NamedTuple):
+    """Everything a zstats call (kernel or blocked oracle) consumes:
+    padded device inputs, block/tile geometry, and static metadata."""
+    plan: _Plan
+    meta: tuple                        # per child (spec, stride, base?, mask?)
+    lane_pads: tuple                   # per table: lane padding count
+    ptab: jax.Array                    # (gpp, kp) padded prior table
+    prow: jax.Array                    # (np_,) bucketed+padded prior rows
+    zm: jax.Array                      # (np_,) token validity
+    ctabs: tuple                       # per child padded table
+    cvals: tuple                       # per child (np_,) values
+    cbases: tuple                      # per child (np_,) base or None
+    cmasks: tuple                      # per child (np_,) mask or None
+    dg0: Optional[jax.Array]           # (kp, 1) streamed-child rowsum digamma
+    blk_tile: jax.Array                # (nblocks,) per-block tile index
+    nblocks: int
+
+
+def _layout(table_prior, prior_rows, children, zmask, *,
+            tables: str = "elog", block_n: Optional[int] = None) -> _Layout:
+    plan = _plan(table_prior, children, tables, block_n)
+    if plan is None:
+        raise ValueError("not fusable: several over-budget tables, a "
+                         "strided over-budget table, or a zmap child — "
+                         "use ref.zstats")
+    n = prior_rows.shape[0]
+    bn = plan.bn
+    fill = 1.0 if tables == "alpha" else 0.0
+
+    def pad_table(t, rows, cols):
+        return jnp.pad(t, ((0, rows - t.shape[0]), (0, cols - t.shape[1])),
+                       constant_values=jnp.asarray(fill, t.dtype))
+
+    key = None
+    if plan.target == "prior":
+        key = prior_rows
+    elif plan.target is not None:
+        key = children[plan.target].values
+    if key is None:
+        np_ = _pad_to(max(n, 1), bn)
+        src = jnp.concatenate([jnp.arange(n, dtype=jnp.int32),
+                               jnp.full((np_ - n,), -1, jnp.int32)])
+        slot_tile = jnp.zeros((np_,), jnp.int32)
+        blk_tile = jnp.zeros((np_ // bn,), jnp.int32)
+    else:
+        src, slot_tile, blk_tile = _bucket(key.astype(jnp.int32), n,
+                                           plan.tl, plan.n_tiles, bn)
+        np_ = src.shape[0]
+
+    srcc = jnp.clip(src, 0)
 
     def ptok(a, fill=0):
-        return jnp.pad(a, (0, np_ - n), constant_values=fill)
+        return jnp.where(src >= 0, a[srcc], fill)
 
     zm = jnp.ones((n,), jnp.float32) if zmask is None \
         else zmask.astype(jnp.float32)
-    inputs = [jnp.pad(elog_prior, ((0, gpp - gp), (0, kp - k))),
-              ptok(prior_rows.astype(jnp.int32)), ptok(zm, 0.0)]
-    tok_spec = pl.BlockSpec((bn,), lambda i: (i,))
-    in_specs = [pl.BlockSpec((gpp, kp), lambda i: (0, 0)), tok_spec, tok_spec]
-    for c, tab, (_, _, gfp, kfp) in zip(children, tabs, tab_dims):
+    prow = prior_rows.astype(jnp.int32)
+    prow = ptok(prow, slot_tile * plan.tl if plan.target == "prior" else 0)
+
+    lane_pads = [plan.kp - plan.k]
+    ctabs, cvals, cbases, cmasks, meta = [], [], [], [], []
+    dg0 = None
+    for ci, (c, (gf, kf, gfp, kfp)) in enumerate(zip(children,
+                                                     plan.child_dims)):
+        ctabs.append(pad_table(c.elog, gfp, kfp))
+        fillv = slot_tile * plan.tl if plan.target == ci else 0
+        cvals.append(ptok(c.values.astype(jnp.int32), fillv))
+        cbases.append(None if c.base is None
+                      else ptok(c.base.astype(jnp.int32), 0))
+        cmasks.append(None if c.mask is None
+                      else ptok(c.mask.astype(jnp.float32), 0.0))
+        meta.append((c.specialized, int(c.stride),
+                     c.base is not None, c.mask is not None))
+        lane_pads.append(kfp - kf)
+        if tables == "alpha" and plan.target == ci:
+            d = rowsum_digamma(c.elog.astype(jnp.float32))
+            dg0 = jnp.pad(d, (0, plan.kp - d.shape[0]))[:, None]
+    return _Layout(plan, tuple(meta), tuple(lane_pads),
+                   pad_table(table_prior, plan.gpp, plan.kp),
+                   prow, ptok(zm, 0.0), tuple(ctabs), tuple(cvals),
+                   tuple(cbases), tuple(cmasks), dg0, blk_tile,
+                   np_ // bn)
+
+
+def _zstats_call(lo: _Layout, extra=None, emit_r: bool = False,
+                 interpret: bool = False):
+    """Assemble and run the fused kernel over a prepared :class:`_Layout`.
+
+    ``extra`` — optional ``(nblocks*bn, kp)`` pre-accumulated logits added
+    after the prior gather (the zmap kernel's phase-one output); ``emit_r``
+    appends the block responsibilities as a final ``(nblocks*bn, kp)``
+    output.  Returns the raw ``pallas_call`` outputs
+    ``[lse_blocks, pstats, *cstats, r?]`` (padded, unsliced).
+    """
+    plan, bn = lo.plan, lo.plan.bn
+    kp, gpp = plan.kp, plan.gpp
+
+    tok_spec = pl.BlockSpec((bn,), lambda i, bt: (i,))
+    inputs = [lo.ptab]
+    if plan.target == "prior":
+        in_specs = [pl.BlockSpec((plan.tl, kp), lambda i, bt: (bt[i], 0))]
+    else:
+        in_specs = [pl.BlockSpec((gpp, kp), lambda i, bt: (0, 0))]
+    inputs += [lo.prow, lo.zm]
+    in_specs += [tok_spec, tok_spec]
+    for ci, ((_, _, gfp, kfp), tab) in enumerate(zip(plan.child_dims,
+                                                     lo.ctabs)):
         inputs.append(tab)
-        in_specs.append(pl.BlockSpec((gfp, kfp), lambda i: (0, 0)))
-        inputs.append(ptok(c.values.astype(jnp.int32)))
+        if plan.target == ci:
+            in_specs.append(pl.BlockSpec((gfp, plan.tl),
+                                         lambda i, bt: (0, bt[i])))
+        else:
+            in_specs.append(pl.BlockSpec((gfp, kfp), lambda i, bt: (0, 0)))
+        inputs.append(lo.cvals[ci])
         in_specs.append(tok_spec)
-        if c.base is not None:
-            inputs.append(ptok(c.base.astype(jnp.int32)))
+        if lo.cbases[ci] is not None:
+            inputs.append(lo.cbases[ci])
             in_specs.append(tok_spec)
-        if c.mask is not None:
-            inputs.append(ptok(c.mask.astype(jnp.float32), 0.0))
+        if lo.cmasks[ci] is not None:
+            inputs.append(lo.cmasks[ci])
             in_specs.append(tok_spec)
+        if lo.dg0 is not None and plan.target == ci:
+            inputs.append(lo.dg0)
+            in_specs.append(pl.BlockSpec((kp, 1), lambda i, bt: (0, 0)))
+    if extra is not None:
+        inputs.append(extra)
+        in_specs.append(pl.BlockSpec((bn, kp), lambda i, bt: (i, 0)))
 
-    out_shape = [jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+    out_shape = [jax.ShapeDtypeStruct((lo.nblocks,), jnp.float32),
                  jax.ShapeDtypeStruct((gpp, kp), jnp.float32)]
-    out_specs = [pl.BlockSpec((1,), lambda i: (i,)),
-                 pl.BlockSpec((gpp, kp), lambda i: (0, 0))]
-    for (_, _, gfp, kfp) in tab_dims:
+    out_specs = [pl.BlockSpec((1,), lambda i, bt: (i,))]
+    if plan.target == "prior":
+        out_specs.append(pl.BlockSpec((plan.tl, kp),
+                                      lambda i, bt: (bt[i], 0)))
+    else:
+        out_specs.append(pl.BlockSpec((gpp, kp), lambda i, bt: (0, 0)))
+    for ci, (_, _, gfp, kfp) in enumerate(plan.child_dims):
         out_shape.append(jax.ShapeDtypeStruct((gfp, kfp), jnp.float32))
-        out_specs.append(pl.BlockSpec((gfp, kfp), lambda i: (0, 0)))
+        if plan.target == ci:
+            out_specs.append(pl.BlockSpec((gfp, plan.tl),
+                                          lambda i, bt: (0, bt[i])))
+        else:
+            out_specs.append(pl.BlockSpec((gfp, kfp),
+                                          lambda i, bt: (0, 0)))
+    if emit_r:
+        out_shape.append(jax.ShapeDtypeStruct((lo.nblocks * bn, kp),
+                                              jnp.float32))
+        out_specs.append(pl.BlockSpec((bn, kp), lambda i, bt: (i, 0)))
 
-    outs = pl.pallas_call(
-        functools.partial(_kernel, k=k, meta=meta),
-        grid=(nblocks,),
+    scratch_shapes = []
+    if plan.mode == "alpha":
+        shp = (plan.tl, kp) if plan.target == "prior" else (gpp, kp)
+        scratch_shapes.append(pltpu.VMEM(shp, jnp.float32))
+        for ci, (_, _, gfp, kfp) in enumerate(plan.child_dims):
+            shp = (gfp, plan.tl) if plan.target == ci else (gfp, kfp)
+            scratch_shapes.append(pltpu.VMEM(shp, jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(lo.nblocks,),
         in_specs=in_specs,
         out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, plan=plan, meta=lo.meta,
+                          lane_pads=lo.lane_pads,
+                          has_extra=extra is not None, emit_r=emit_r),
+        grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(*inputs)
+    )(lo.blk_tile, *inputs)
 
+
+def zstats(table_prior: jax.Array, prior_rows: jax.Array, children: tuple,
+           zmask=None, *, tables: str = "elog",
+           block_n: int | None = None, interpret: bool = False):
+    """Pallas-backed fused z-substep; matches ``ref.zstats`` (flat case).
+
+    ``tables="elog"`` gathers from Elog tables as given; ``tables="alpha"``
+    treats them as Dirichlet concentrations and fuses the
+    ``dirichlet_expectation`` into the gather.  Tables too large for the
+    VMEM budget are streamed tile-by-tile (see the module docstring);
+    segment latents (zmap) belong to ``fused_zmap.zstats_zmap``.
+    """
+    if any(c.zmap is not None for c in children):
+        raise ValueError("segment latents (zmap) take the two-phase "
+                         "fused_zmap kernel; use ops.zstats")
+    lo = _layout(table_prior, prior_rows, children, zmask,
+                 tables=tables, block_n=block_n)
+    outs = _zstats_call(lo, interpret=interpret)
+    plan = lo.plan
     lse_blocks, pstats = outs[0], outs[1]
     cstats = tuple(cs[:gf, :kf]
-                   for cs, (gf, kf, _, _) in zip(outs[2:], tab_dims))
-    return lse_blocks.sum(), pstats[:gp, :k], cstats
+                   for cs, (gf, kf, _, _) in zip(outs[2:], plan.child_dims))
+    return lse_blocks.sum(), pstats[:plan.gp, :plan.k], cstats
 
 
-__all__ = ["ZChild", "zstats", "fusable"]
+__all__ = ["ZChild", "zstats", "fusable", "rowsum_digamma"]

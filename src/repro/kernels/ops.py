@@ -8,6 +8,7 @@ exercises the kernel bodies end-to-end).
 
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
@@ -18,11 +19,8 @@ from .ref import ZChild
 from .vmp_zstep import zstep as _zstep_pallas
 
 
-def _backend() -> str:
-    """Which kernel implementation this process dispatches to: ``"pallas"``
-    (TPU, compiled), ``"pallas_interpret"`` (``REPRO_FORCE_PALLAS=1``:
-    kernel bodies under the interpreter — slow, for testing), or ``"ref"``
-    (pure-jnp oracles, the CPU/GPU default)."""
+@functools.lru_cache(maxsize=None)
+def _backend_cached() -> str:
     if os.environ.get("REPRO_FORCE_PALLAS") == "1":
         return "pallas_interpret"
     try:
@@ -33,12 +31,37 @@ def _backend() -> str:
     return "ref"
 
 
+def _backend() -> str:
+    """Which kernel implementation this process dispatches to: ``"pallas"``
+    (TPU, compiled), ``"pallas_interpret"`` (``REPRO_FORCE_PALLAS=1``:
+    kernel bodies under the interpreter — slow, for testing), or ``"ref"``
+    (pure-jnp oracles, the CPU/GPU default).
+
+    The answer is process-constant (an env var plus the jax backend), so it
+    is cached — this sits on every kernel dispatch in the VMP hot loop, and
+    re-reading the environment plus ``jax.default_backend()`` per call cost
+    real trace time.  Tests that flip ``REPRO_FORCE_PALLAS`` must call
+    :func:`reset_backend_cache` after changing the environment (the test
+    suite does this automatically around every test via an autouse
+    fixture in ``tests/conftest.py``)."""
+    return _backend_cached()
+
+
+def reset_backend_cache() -> None:
+    """Forget the cached :func:`_backend` answer (call after changing
+    ``REPRO_FORCE_PALLAS`` or the jax platform at runtime)."""
+    _backend_cached.cache_clear()
+
+
 def dirichlet_expectation(alpha: jax.Array) -> jax.Array:
     """Rowwise expected log under a Dirichlet: ``digamma(alpha) -
     digamma(alpha.sum(-1, keepdims=True))``.  ``alpha`` is a ``(G, K)``
     float32 concentration table (other ranks fall back to the reference
     path); the result matches ``alpha``'s shape and dtype.  This is the
-    Elog message table every VMP/SVI substep gathers from."""
+    Elog message table every VMP/SVI substep gathers from — though the
+    token plate itself now fuses this computation into ``zstats``
+    (``tables="alpha"``); explicit tables remain for statics, diagnostics,
+    and ``latent_responsibilities``."""
     b = _backend()
     if b == "ref" or alpha.ndim != 2:
         return ref.dirichlet_expectation(alpha)
@@ -57,36 +80,58 @@ def zstep(logits: jax.Array):
     return _zstep_pallas(logits, interpret=(b == "pallas_interpret"))
 
 
-def zstats(elog_prior: jax.Array, prior_rows: jax.Array, children: tuple,
-           zmask=None):
+def zstats(table_prior: jax.Array, prior_rows: jax.Array, children: tuple,
+           zmask=None, *, tables: str = "elog"):
     """Fused token-plate substep: ``(lse_sum, prior_stats, child_stats)``.
 
-    Inputs: ``elog_prior`` — the ``(G, K)`` prior-Dirichlet Elog table
-    (float32, or the ``EngineConfig.elog_dtype`` narrow type);
+    Inputs: ``table_prior`` — the ``(G, K)`` prior-Dirichlet table;
     ``prior_rows`` — ``(N,) int32`` row of each latent instance;
     ``children`` — a tuple of :class:`ZChild` (each bundles a child's
-    ``(Gc, Kc)`` Elog table, ``(N,) int32`` observed values, row
-    base/stride, optional ``(N,) int32`` zmap and ``(N,) float32`` mask);
-    ``zmask`` — optional ``(n_latent,) float32`` validity mask.  Returns
-    ``lse_sum`` — scalar float32 sum of per-instance logsumexp (the token
-    plate's ELBO term); ``prior_stats`` — ``(G, K)`` float32
-    responsibility scatters onto the prior rows; ``child_stats`` — per
-    child a ``(Gc, Kc)`` float32 stats table.
+    ``(Gc, Kc)`` table, ``(N,) int32`` observed values, row base/stride,
+    optional ``(N,) int32`` zmap and ``(N,) float32`` mask); ``zmask`` —
+    optional ``(n_latent,) float32`` validity mask.  With the default
+    ``tables="elog"`` the tables hold Elog expectations (float32, or the
+    ``EngineConfig.elog_dtype`` narrow type); with ``tables="alpha"`` they
+    hold Dirichlet *concentrations* and the ``dirichlet_expectation`` is
+    fused into the gather (in-kernel digamma on TPU — one less table
+    materialization per Dirichlet per step).  Returns ``lse_sum`` — scalar
+    float32 sum of per-instance logsumexp (the token plate's ELBO term);
+    ``prior_stats`` — ``(G, K)`` float32 responsibility scatters onto the
+    prior rows; ``child_stats`` — per child a ``(Gc, Kc)`` float32 stats
+    table.
 
     The hot path of every VMP/SVI iteration (see ``core/vmp.py:_step_body``).
-    On TPU the fused Pallas kernel keeps responsibilities out of HBM; segment
-    latents (a child with a ``zmap``) and models whose Elog tables exceed the
-    kernel's VMEM budget take the chunked ``ref`` oracle, which streams token
-    chunks through a ``lax.scan`` and so also never materializes the
-    (N_token, K) working set.
+    On TPU the fused Pallas kernels keep responsibilities out of HBM:
+
+      - flat latents take ``fused_zstats`` — tables too large for VMEM are
+        streamed tile-by-tile with trace-time token bucketing (the
+        large-vocabulary path);
+      - segment latents (a child with a ``zmap``) take the two-phase
+        ``fused_zmap`` kernel, which materializes only the (n_latent, K)
+        logits/responsibilities;
+      - what neither supports (several over-budget tables at once, an
+        over-budget table behind a strided row computation, a segment
+        latent whose tables exceed VMEM) falls back to the chunked ``ref``
+        oracle, which streams token chunks through a ``lax.scan`` and so
+        also never materializes the (N_token, K) working set.
     """
     b = _backend()
     if b != "ref":
-        from .fused_zstats import fusable, zstats as _zstats_pallas
-        if fusable(elog_prior, children):
-            return _zstats_pallas(elog_prior, prior_rows, children, zmask,
-                                  interpret=(b == "pallas_interpret"))
-    return ref.zstats(elog_prior, prior_rows, children, zmask)
+        interp = b == "pallas_interpret"
+        if any(c.zmap is not None for c in children):
+            from .fused_zmap import fusable_zmap, zstats_zmap
+            if fusable_zmap(table_prior, children, tables,
+                            n_latent=prior_rows.shape[0]):
+                return zstats_zmap(table_prior, prior_rows, children,
+                                   zmask, tables=tables, interpret=interp)
+        else:
+            from .fused_zstats import fusable, zstats as _zstats_pallas
+            if fusable(table_prior, children, tables):
+                return _zstats_pallas(table_prior, prior_rows, children,
+                                      zmask, tables=tables,
+                                      interpret=interp)
+    return ref.zstats(table_prior, prior_rows, children, zmask,
+                      tables=tables)
 
 
 def flash_attention(q, k, v, *, causal: bool = True):
@@ -103,4 +148,4 @@ def flash_attention(q, k, v, *, causal: bool = True):
 
 
 __all__ = ["ZChild", "dirichlet_expectation", "zstep", "zstats",
-           "flash_attention"]
+           "flash_attention", "reset_backend_cache"]

@@ -7,6 +7,7 @@ fallback on non-TPU backends.
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -59,8 +60,11 @@ class ZChild(NamedTuple):
     and stride == 1`` is the specialized LDA fast path where the row IS the
     selector value).  ``zmap`` maps tokens to latent instances when the token
     plate is nested below the latent plate (SLDA); ``None`` means identity.
+    ``elog`` holds the parent's message table: E[log theta] values under
+    the default ``zstats(..., tables="elog")``, or the Dirichlet posterior
+    concentrations under ``tables="alpha"`` (the fused-expectation mode).
     """
-    elog: jax.Array                    # (G_f, K_f) parent Elog table
+    elog: jax.Array                    # (G_f, K_f) parent message table
     values: jax.Array                  # (Nt,) observed category per token
     stride: int = 1
     zmap: Optional[jax.Array] = None   # (Nt,) token -> latent instance
@@ -157,7 +161,7 @@ def _token_xs(child: ZChild, i: int) -> dict:
 
 def zstats(elog_prior: jax.Array, prior_rows: jax.Array,
            children: tuple, zmask: Optional[jax.Array] = None,
-           chunk: int = ZSTATS_CHUNK):
+           chunk: int = ZSTATS_CHUNK, *, tables: str = "elog"):
     """Fused z-substep semantics: one streaming pass over the token plate.
 
     Computes, without ever materializing the (N, K) responsibilities or
@@ -177,7 +181,20 @@ def zstats(elog_prior: jax.Array, prior_rows: jax.Array,
     sentences) need a cross-token reduction before the softmax, so they
     materialize the (n_latent, K) logits — still dropping the (N_token, K)
     working set, which is the large one.
+
+    ``tables="alpha"`` treats ``elog_prior`` and every child ``elog`` as
+    Dirichlet *concentration* tables and computes the expectations here
+    (upcast to f32 first — narrow ``elog_dtype`` tables stay narrow only
+    in HBM).  This mirrors the Pallas kernels' fused
+    ``dirichlet_expectation`` mode; on this pure-jnp path XLA fuses the
+    digamma into the gathers anyway, so it is a semantic switch, not an
+    optimization.
     """
+    if tables == "alpha":
+        elog_prior = dirichlet_expectation(elog_prior.astype(jnp.float32))
+        children = tuple(
+            c._replace(elog=dirichlet_expectation(
+                c.elog.astype(jnp.float32))) for c in children)
     k = elog_prior.shape[1]
     if any(c.zmap is not None for c in children):
         return _zstats_segmented(elog_prior, prior_rows, children, zmask,
@@ -270,3 +287,193 @@ def _zstats_segmented(elog_prior, prior_rows, children, zmask, chunk, k):
                          _child_stats_init(c), st_body)
         cstats.append(_child_stats_finish(c, s))
     return lse_sum, pstats, tuple(cstats)
+
+
+# ---------------------------------------------------------------------------
+# block-structured oracle: the Pallas kernels' bitwise parity target
+# ---------------------------------------------------------------------------
+
+def _resolve_table(tab, lane_pad: int, tables: str, dg0=None):
+    """Elog values of one padded table, with the kernels' exact ops.
+
+    Jitted so XLA emits the same fused digamma code it emits for the
+    kernel's in-VMEM computation — eager op-by-op evaluation differs in
+    the last ulp, which would break the bitwise contract."""
+    if tables != "alpha":
+        return tab.astype(jnp.float32)
+    if dg0 is not None:                # streamed along the value axis
+        return _jit_digamma_sub(tab.astype(jnp.float32), dg0)
+    return _jit_elog_from_alpha(tab.astype(jnp.float32), lane_pad)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _jit_elog_from_alpha(a, lane_pad: int):
+    from .fused_zstats import _elog_from_alpha
+    return _elog_from_alpha(a, lane_pad)
+
+
+@jax.jit
+def _jit_digamma_sub(a, dg0):
+    from .dirichlet_expectation import _digamma
+    return _digamma(a) - dg0
+
+
+def _blocked_call(lo, extra=None, emit_r: bool = False):
+    """Pure-jnp mirror of ``fused_zstats._zstats_call``: the same blocks in
+    the same order with the same one-hot matmuls, accumulated with plain
+    adds.  Returns the raw padded ``[lse_blocks, pstats, *cstats, r?]``."""
+    import jax as _jax
+    from .fused_zstats import _block_step
+    plan, bn = lo.plan, lo.plan.bn
+    kp, tl = plan.kp, plan.tl
+
+    ptab_full = None if plan.target == "prior" \
+        else _resolve_table(lo.ptab, lo.lane_pads[0], plan.mode)
+    ctab_full = [
+        None if plan.target == ci
+        else _resolve_table(tab, lo.lane_pads[1 + ci], plan.mode)
+        for ci, tab in enumerate(lo.ctabs)]
+
+    lse = []
+    pstats = jnp.zeros((lo.ptab.shape[0], kp), jnp.float32)
+    cstats = [jnp.zeros(t.shape, jnp.float32) for t in lo.ctabs]
+    rs = []
+    for b in range(lo.nblocks):
+        sl = slice(b * bn, (b + 1) * bn)
+        t = lo.blk_tile[b]
+        rows = lo.prow[sl]
+        if plan.target == "prior":
+            ptab = _resolve_table(
+                _jax.lax.dynamic_slice(lo.ptab, (t * tl, 0), (tl, kp)),
+                lo.lane_pads[0], plan.mode)
+            rows = rows - t * tl
+        else:
+            ptab = ptab_full
+        tabs, vals = [], []
+        for ci, tab in enumerate(lo.ctabs):
+            v = lo.cvals[ci][sl]
+            if plan.target == ci:
+                tabs.append(_resolve_table(
+                    _jax.lax.dynamic_slice(tab, (0, t * tl),
+                                           (tab.shape[0], tl)),
+                    lo.lane_pads[1 + ci], plan.mode, dg0=lo.dg0))
+                v = v - t * tl
+            else:
+                tabs.append(ctab_full[ci])
+            vals.append(v)
+        bases = [None if a is None else a[sl] for a in lo.cbases]
+        masks = [None if a is None else a[sl] for a in lo.cmasks]
+        ex = None if extra is None else extra[sl]
+        l, pd, cds, r = _block_step(ptab, tabs, rows, vals, bases, masks,
+                                    lo.zm[sl], plan.k, lo.meta, ex)
+        lse.append(l)
+        rs.append(r)
+        if plan.target == "prior":
+            cur = _jax.lax.dynamic_slice(pstats, (t * tl, 0), (tl, kp))
+            pstats = _jax.lax.dynamic_update_slice(pstats, cur + pd,
+                                                   (t * tl, 0))
+        else:
+            pstats = pstats + pd
+        for ci, cd in enumerate(cds):
+            if plan.target == ci:
+                cur = _jax.lax.dynamic_slice(
+                    cstats[ci], (0, t * tl), (cstats[ci].shape[0], tl))
+                cstats[ci] = _jax.lax.dynamic_update_slice(
+                    cstats[ci], cur + cd, (0, t * tl))
+            else:
+                cstats[ci] = cstats[ci] + cd
+    outs = [jnp.stack(lse), pstats, *cstats]
+    if emit_r:
+        outs.append(jnp.concatenate(rs, axis=0))
+    return outs
+
+
+def zstats_blocked(table_prior: jax.Array, prior_rows: jax.Array,
+                   children: tuple, zmask: Optional[jax.Array] = None, *,
+                   tables: str = "elog", block_n: Optional[int] = None):
+    """Oracle for the *block structure* of the fused Pallas kernels.
+
+    Replays the kernels' exact tiling, token bucketing, per-block one-hot
+    matmuls, and accumulation order in straight-line jnp (no
+    ``pallas_call``), so its outputs are **bitwise equal** to the
+    interpret-mode kernels — including the HBM-streamed large-table path,
+    the two-phase zmap path, and the ``tables="alpha"`` fused
+    ``dirichlet_expectation``.  This validates the Pallas plumbing
+    (BlockSpecs, scalar-prefetch index maps, scratch accumulators) against
+    plain array code; :func:`zstats` remains the *semantic* oracle the
+    kernels must match within float tolerance.  Lazily imports the shared
+    layout/block helpers (pure jnp) from the kernel modules.
+    """
+    from .fused_zstats import (_child_message, _child_scatter, _layout,
+                               _onehot)
+    if not any(c.zmap is not None for c in children):
+        lo = _layout(table_prior, prior_rows, children, zmask,
+                     tables=tables, block_n=block_n)
+        outs = _blocked_call(lo)
+        cstats = tuple(
+            cs[:gf, :kf] for cs, (gf, kf, _, _) in
+            zip(outs[2:], lo.plan.child_dims))
+        return (outs[0].sum(), outs[1][:table_prior.shape[0],
+                                       :lo.plan.k], cstats)
+
+    from .fused_zmap import _dims, _phase_inputs
+    nz = prior_rows.shape[0]
+    k, kp, nzp, _, cdims = _dims(table_prior, children, nz)
+
+    # phase 1: per-block logits accumulation of every zmap child
+    extra = jnp.zeros((nzp, kp), jnp.float32)
+    for c, cd in zip(children, cdims):
+        if c.zmap is None:
+            continue
+        bn, tab, vals, zmi, tm, base = _phase_inputs(c, kp, nzp, cd,
+                                                     tables, block_n)
+        tabv = _resolve_table(tab, cd[3] - cd[1], tables)
+        zacc = jnp.zeros((nzp, kp), jnp.float32)
+        for b in range(vals.shape[0] // bn):
+            sl = slice(b * bn, (b + 1) * bn)
+            lane = jax.lax.broadcasted_iota(jnp.int32, (bn, kp), 1)
+            e = _child_message(tabv, vals[sl],
+                               None if base is None else base[sl],
+                               tm[sl], k, lane, c.specialized,
+                               int(c.stride))
+            oh_z = _onehot(zmi[sl], nzp)
+            zacc = zacc + jnp.dot(oh_z.T, e,
+                                  preferred_element_type=jnp.float32)
+        extra = extra + zacc
+
+    # phase 2a: latent-plate softmax + prior/non-zmap stats (+ r)
+    nonz = tuple(c for c in children if c.zmap is None)
+    lo = _layout(table_prior, prior_rows, nonz, zmask,
+                 tables=tables, block_n=block_n)
+    if lo.plan.target is not None:     # mirrors fused_zmap.zstats_zmap
+        raise ValueError("segment latents cannot combine with streamed "
+                         "tables; use ref.zstats")
+    np_lat = lo.nblocks * lo.plan.bn
+    ex = extra[:np_lat] if np_lat <= nzp else \
+        jnp.pad(extra, ((0, np_lat - nzp), (0, 0)))
+    outs = _blocked_call(lo, extra=ex, emit_r=True)
+    lse = outs[0].sum()
+    pstats = outs[1][:table_prior.shape[0], :k]
+    r = jnp.pad(outs[-1][:nz], ((0, nzp - nz), (0, 0)))
+
+    # phase 2b: zmap child stats from r[zmap]
+    nonz_stats = iter(cs[:gf, :kf] for cs, (gf, kf, _, _) in
+                      zip(outs[2:-1], lo.plan.child_dims))
+    cstats = []
+    for c, cd in zip(children, cdims):
+        if c.zmap is None:
+            cstats.append(next(nonz_stats))
+            continue
+        gf, kf, gfp, kfp = cd
+        bn, _, vals, zmi, tm, base = _phase_inputs(c, kp, nzp, cd,
+                                                   "elog", block_n)
+        acc = jnp.zeros((gfp, kfp), jnp.float32)
+        for b in range(vals.shape[0] // bn):
+            sl = slice(b * bn, (b + 1) * bn)
+            oh_z = _onehot(zmi[sl], nzp)
+            w = jnp.dot(oh_z, r, preferred_element_type=jnp.float32)
+            acc = acc + _child_scatter(
+                w, vals[sl], None if base is None else base[sl],
+                tm[sl], acc.shape, k, c.specialized, int(c.stride))
+        cstats.append(acc[:gf, :kf])
+    return lse, pstats, tuple(cstats)

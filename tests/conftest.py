@@ -32,6 +32,17 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(skip)
 
 
+@pytest.fixture(autouse=True)
+def _reset_kernel_backend_cache():
+    """The kernel dispatch backend is cached per process (it sits on the
+    VMP hot loop); tests that flip ``REPRO_FORCE_PALLAS`` via monkeypatch
+    need the cache cleared on both sides so routing follows the env var."""
+    from repro.kernels import ops
+    ops.reset_backend_cache()
+    yield
+    ops.reset_backend_cache()
+
+
 # ---------------------------------------------------------------------------
 # shared model/corpus fixtures
 # ---------------------------------------------------------------------------

@@ -16,6 +16,34 @@ def test_make_engine_selection():
         make_engine("annealed_ais")
 
 
+def test_engine_svi_knobs_round_trip():
+    """Every SVI knob on EngineConfig must reach the SVIConfig the engine
+    builds — holdout_local_iters, prefetch, and the constant-rho override
+    used to be dropped silently (engine users always got defaults)."""
+    from repro.core.engine import _svi_config
+    cfg = EngineConfig(backend="svi", batch_size=17, kappa=0.9, tau=3.0,
+                       rho=0.25, local_iters=4, pad_multiple=64,
+                       holdout_frac=0.125, holdout_every=7,
+                       holdout_local_iters=21, prefetch=False,
+                       elog_dtype="bfloat16", seed=11)
+    s = _svi_config(cfg, full_batch=False, n_groups=100)
+    assert (s.batch_size, s.kappa, s.tau, s.rho) == (17, 0.9, 3.0, 0.25)
+    assert (s.local_iters, s.pad_multiple) == (4, 64)
+    assert (s.holdout_frac, s.holdout_every) == (0.125, 7)
+    assert (s.holdout_local_iters, s.prefetch) == (21, False)
+    assert (s.elog_dtype, s.seed, s.shuffle) == ("bfloat16", 11, True)
+    # make_engine keyword overrides carry the new knobs too
+    eng = make_engine("svi", rho=0.25, holdout_local_iters=21,
+                      prefetch=False)
+    assert (eng.cfg.rho, eng.cfg.holdout_local_iters,
+            eng.cfg.prefetch) == (0.25, 21, False)
+    # the full-batch reference pins the exactness knobs regardless
+    fb = _svi_config(cfg, full_batch=True, n_groups=100)
+    assert (fb.rho, fb.batch_size, fb.pad_multiple, fb.shuffle) == \
+        (1.0, 100, 0, False)
+    assert (fb.holdout_local_iters, fb.prefetch) == (21, False)
+
+
 def test_gibbs_rejects_non_lda_shapes(small_corpus):
     m = models.make("dcmlda", alpha=0.4, beta=0.4, K=3, V=30)
     m["x"].observe(small_corpus["tokens"],

@@ -162,9 +162,10 @@ def test_zstats_ref_matches_dense(case):
 
 @pytest.mark.parametrize("case", range(len(ZSTATS_CASES)))
 def test_zstats_forced_pallas_parity(case, monkeypatch):
-    """ops.zstats under REPRO_FORCE_PALLAS=1 (interpret-mode kernel for
-    flat latents, chunked-oracle routing for segment latents) matches the
-    ref oracle across shapes, masks, zmap, and child-factor layouts."""
+    """ops.zstats under REPRO_FORCE_PALLAS=1 (interpret-mode kernels: the
+    fused flat kernel for token-plate latents, the two-phase fused_zmap
+    kernel for segment latents) matches the ref oracle across shapes,
+    masks, zmap, and child-factor layouts."""
     from repro.kernels import ops
     monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
     n, k, gp, cfgs, zm, nz = ZSTATS_CASES[case]
@@ -210,6 +211,286 @@ def test_zstats_bf16_tables_f32_accum():
     assert got[1].dtype == jnp.float32
     np.testing.assert_allclose(float(got[0]), float(want[0]), rtol=2e-2)
     np.testing.assert_allclose(got[1], want[1], rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# streamed (large-table) path, zmap kernel, and fused dirichlet_expectation
+# ---------------------------------------------------------------------------
+
+def _assert_zstats_close(got, want, rtol=2e-4, atol=2e-4):
+    np.testing.assert_allclose(float(got[0]), float(want[0]),
+                               rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(got[1], want[1], rtol=rtol, atol=atol)
+    for g, w in zip(got[2], want[2]):
+        np.testing.assert_allclose(g, w, rtol=rtol, atol=atol)
+
+
+def _assert_zstats_bitwise(got, want):
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    for g, w in zip(got[2], want[2]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def _gamma_case(case_args):
+    """A ZSTATS-style case with positive (concentration-like) tables, for
+    the ``tables="alpha"`` mode."""
+    et, rows, children, zm = _zcase(*case_args)
+    rng = np.random.default_rng(101)
+
+    def pos(t):
+        return jnp.asarray((rng.gamma(1.0, 1.0, t.shape) + 1e-2)
+                           .astype(np.float32))
+
+    return (pos(et), rows,
+            tuple(c._replace(elog=pos(c.elog)) for c in children), zm)
+
+
+# padded f32 table bytes: child 128 x 33024 ~ 16.9 MiB, prior 70016 x 128
+# ~ 35.8 MiB — both > 2x the 8 MiB _TABLE_BUDGET, so they must stream.
+STREAM_CASES = {
+    "child": (5, 6000, 4, 11, [(4, 33000, 1, False, False, False)], False,
+              None),
+    "prior": (6, 5000, 16, 70000, [(16, 33, 1, False, False, False)], True,
+              None),
+}
+
+
+@pytest.mark.parametrize("name", sorted(STREAM_CASES))
+def test_streamed_table_routes_and_matches_ref(name, monkeypatch):
+    """Tables >2x _TABLE_BUDGET no longer fall off the fast path: under
+    REPRO_FORCE_PALLAS=1 they route through the fused kernel (routing spy),
+    with the over-budget table streamed tile-by-tile, and match the ref
+    oracle within float tolerance and the blocked oracle bitwise."""
+    import repro.kernels.fused_zstats as fz
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    et, rows, children, zmask = _zcase(*STREAM_CASES[name])
+    plan = fz._plan(et, children)
+    assert plan is not None and plan.target is not None, \
+        "case must exercise the streamed path"
+    assert plan.target == ("prior" if name == "prior" else 0)
+    assert plan.n_tiles > 1
+
+    calls = []
+    orig = fz.zstats
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(fz, "zstats", spy)
+    got = ops.zstats(et, rows, children, zmask)
+    assert calls, "large table did not reach the fused Pallas kernel"
+    _assert_zstats_close(got, ref.zstats(et, rows, children, zmask))
+    _assert_zstats_bitwise(got, ref.zstats_blocked(et, rows, children,
+                                                   zmask))
+
+
+ZMAP_KERNEL_CASES = [
+    # masked specialized zmap child
+    (240, 3, 10, [(3, 15, 1, False, True, True)], True, 40),
+    # strided (base + stride*z) zmap child
+    (200, 3, 9, [(30, 11, 3, True, True, True)], False, 35),
+    # multi-child: zmap child + flat (latent-plate) child
+    (300, 3, 8, [(3, 12, 1, False, False, True),
+                 (21, 9, 7, True, True, False)], True, 50),
+]
+
+
+@pytest.mark.parametrize("case", range(len(ZMAP_KERNEL_CASES)))
+def test_zmap_routes_to_two_phase_kernel(case, monkeypatch):
+    """Segment latents no longer fall back to the oracle: under
+    REPRO_FORCE_PALLAS=1 they take the two-phase fused_zmap kernel
+    (routing spy) and match both oracles."""
+    import repro.kernels.fused_zmap as fzm
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    n, k, gp, cfgs, zm, nz = ZMAP_KERNEL_CASES[case]
+    et, rows, children, zmask = _zcase(1000 + case, n, k, gp, cfgs, zm, nz)
+
+    calls = []
+    orig = fzm.zstats_zmap
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(fzm, "zstats_zmap", spy)
+    got = ops.zstats(et, rows, children, zmask)
+    assert calls, "zmap latent did not reach the two-phase Pallas kernel"
+    _assert_zstats_close(got, ref.zstats(et, rows, children, zmask))
+    _assert_zstats_bitwise(got, ref.zstats_blocked(et, rows, children,
+                                                   zmask))
+
+
+ALPHA_CASES = [
+    ("resident", (20, 300, 4, 20, [(4, 33, 1, False, False, False)], False,
+                  None)),
+    ("strided-masked", (21, 150, 3, 9, [(30, 11, 3, True, True, False)],
+                        True, None)),
+    ("streamed-child", (22, 4000, 4, 11,
+                        [(4, 33000, 1, False, False, False)], False, None)),
+    ("streamed-prior", (23, 4000, 16, 70000,
+                        [(16, 33, 1, False, False, False)], True, None)),
+    ("zmap", (24, 240, 3, 10, [(3, 15, 1, False, True, True)], True, 40)),
+]
+
+
+@pytest.mark.parametrize("name,case_args", ALPHA_CASES)
+def test_fused_dirichlet_expectation_bitwise(name, case_args, monkeypatch):
+    """``tables="alpha"`` (dirichlet_expectation fused into the gather)
+    is bitwise equal in f32 to the two-call composition — the standalone
+    DE kernel materializing every Elog table, then the ``tables="elog"``
+    kernel — on the resident, streamed, and zmap paths."""
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    alpha_p, rows, children, zmask = _gamma_case(case_args)
+    composed = ops.zstats(
+        ops.dirichlet_expectation(alpha_p), rows,
+        tuple(c._replace(elog=ops.dirichlet_expectation(c.elog))
+              for c in children),
+        zmask, tables="elog")
+    fused = ops.zstats(alpha_p, rows, children, zmask, tables="alpha")
+    _assert_zstats_bitwise(fused, composed)
+    # and both agree with the semantic oracle fed the same concentrations
+    _assert_zstats_close(fused, ref.zstats(alpha_p, rows, children, zmask,
+                                           tables="alpha"))
+
+
+def test_fused_de_bf16_elog_dtype(monkeypatch):
+    """The narrow-table mode composes with the fused expectation: bf16
+    concentration tables are upcast in-kernel, digamma/softmax/stats stay
+    f32, and the result lands within bf16 noise of the f32 run."""
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    alpha_p, rows, children, zmask = _gamma_case(
+        (30, 300, 4, 20, [(4, 33, 1, False, False, False)], False, None))
+    want = ops.zstats(alpha_p, rows, children, zmask, tables="alpha")
+    got = ops.zstats(
+        alpha_p.astype(jnp.bfloat16), rows,
+        tuple(c._replace(elog=c.elog.astype(jnp.bfloat16))
+              for c in children),
+        zmask, tables="alpha")
+    assert got[1].dtype == jnp.float32
+    np.testing.assert_allclose(float(got[0]), float(want[0]), rtol=2e-2)
+    np.testing.assert_allclose(got[1], want[1], rtol=5e-2, atol=5e-2)
+    for g, w in zip(got[2], want[2]):
+        np.testing.assert_allclose(g, w, rtol=5e-2, atol=5e-2)
+
+
+def test_large_vocab_model_routes_streamed_kernel(monkeypatch):
+    """End to end: an LDA model whose phi table is >2x _TABLE_BUDGET runs
+    its step through the streamed Pallas kernel under REPRO_FORCE_PALLAS=1
+    (the acceptance shape for the large-vocabulary fast path)."""
+    import repro.kernels.fused_zstats as fz
+    from repro.core import models
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    rng = np.random.default_rng(0)
+    V = 33000
+    toks = rng.integers(0, V, 1200).astype(np.int32)
+    docs = np.sort(rng.integers(0, 40, 1200)).astype(np.int32)
+    m = models.make("lda", alpha=0.1, beta=0.05, K=4, V=V)
+    m["x"].observe(toks, segment_ids=docs)
+
+    seen = []
+    orig = fz.zstats
+
+    def spy(table_prior, prior_rows, children, zmask=None, **kw):
+        seen.append(fz._plan(table_prior, children,
+                             kw.get("tables", "elog")))
+        return orig(table_prior, prior_rows, children, zmask, **kw)
+
+    monkeypatch.setattr(fz, "zstats", spy)
+    m.infer(steps=1, seed=0)
+    assert seen, "model step did not reach the fused Pallas kernel"
+    assert any(p is not None and p.target == 0 and p.n_tiles > 1
+               for p in seen), "phi was not streamed"
+    assert np.isfinite(m.elbo_trace).all()
+
+
+def test_slda_model_routes_zmap_kernel(monkeypatch):
+    """End to end: an SLDA (segment-latent) model runs its step through
+    the two-phase zmap Pallas kernel under REPRO_FORCE_PALLAS=1."""
+    import repro.kernels.fused_zmap as fzm
+    from repro.core import models
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    rng = np.random.default_rng(3)
+    S = 60
+    sent_doc = np.sort(rng.integers(0, 10, size=S)).astype(np.int32)
+    tok_sent = np.repeat(np.arange(S, dtype=np.int32),
+                         rng.integers(3, 9, size=S))
+    xs = rng.integers(0, 20, size=len(tok_sent)).astype(np.int32)
+    m = models.make("slda", alpha=0.2, beta=0.2, K=3, V=20)
+    m["x"].observe(xs, segment_ids=tok_sent)
+    m.bind("sents", sent_doc)
+
+    calls = []
+    orig = fzm.zstats_zmap
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(fzm, "zstats_zmap", spy)
+    m.infer(steps=2, seed=0)
+    assert calls, "SLDA step did not reach the two-phase Pallas kernel"
+    assert np.isfinite(m.elbo_trace).all()
+    assert m.elbo_trace[-1] >= m.elbo_trace[0] - 1e-3
+
+
+def test_plan_rejects_tiles_wider_than_budget():
+    """A single row/column wider than a stream tile cannot be tiled along
+    the gather axis: _plan must answer None (ref fallback), not hand out
+    a layout whose double-buffered tiles blow VMEM.  Shape-only check
+    (ShapeDtypeStructs) — these tables would be GBs if materialized."""
+    import jax
+    import repro.kernels.fused_zstats as fz
+    # specialized child, K=8192 topics: one 128-column tile is 4 MiB
+    tp = jax.ShapeDtypeStruct((16, 8192), jnp.float32)
+    big = ref.ZChild(jax.ShapeDtypeStruct((8192, 40000), jnp.float32),
+                     values=None)
+    assert fz._plan(tp, (big,)) is None
+    assert not fz.fusable(tp, (big,))
+    # streamed-prior flavor: K=70000 lanes, one 8-row tile is >2 MiB
+    tp = jax.ShapeDtypeStruct((100000, 70000), jnp.float32)
+    small = ref.ZChild(jax.ShapeDtypeStruct((10, 5), jnp.float32),
+                       values=None, stride=2)
+    assert fz._plan(tp, (small,)) is None
+
+
+def test_fusable_zmap_requires_n_latent():
+    """The (n_latent, K) budget is not derivable from the tables (SLDA can
+    have far more sentences than its prior has rows), so an unknown
+    n_latent must answer False — never claim an over-VMEM layout fits."""
+    from repro.kernels.fused_zmap import fusable_zmap
+    ch = (ref.ZChild(jnp.zeros((3, 5), jnp.float32),
+                     jnp.zeros((4,), jnp.int32), 1,
+                     zmap=jnp.zeros((4,), jnp.int32)),)
+    tp = jnp.zeros((10, 3), jnp.float32)
+    assert not fusable_zmap(tp, ch)
+    assert fusable_zmap(tp, ch, n_latent=4)
+
+
+def test_zmap_kernel_refuses_streamed_prior():
+    """zstats_zmap matches phase-1 logits and the emitted r to latent
+    instances positionally, which a bucketed (streamed-table) latent
+    layout would permute: direct calls past the fusable_zmap gate must
+    raise, not silently corrupt."""
+    import repro.kernels.fused_zmap as fzm
+    rng = np.random.default_rng(0)
+    nz, k = 200, 16
+    tp = jnp.asarray(rng.normal(size=(70000, k)).astype(np.float32))
+    rows = jnp.asarray(rng.integers(0, 70000, nz).astype(np.int32))
+    ch = (ref.ZChild(jnp.asarray(rng.normal(size=(k, 7))
+                                 .astype(np.float32)),
+                     jnp.asarray(rng.integers(0, 7, 500).astype(np.int32)),
+                     1, zmap=jnp.asarray(np.sort(rng.integers(0, nz, 500))
+                                         .astype(np.int32))),)
+    with pytest.raises(ValueError, match="streamed"):
+        fzm.zstats_zmap(tp, rows, ch, interpret=True)
+    with pytest.raises(ValueError, match="streamed"):
+        ref.zstats_blocked(tp, rows, ch)
 
 
 def test_ops_dispatch_cpu_uses_ref(monkeypatch):

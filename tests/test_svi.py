@@ -90,6 +90,38 @@ def test_robbins_monro_schedule():
         SVIConfig(tau=-1.0)
 
 
+@pytest.mark.parametrize("tau", [0.0, 0.5])
+def test_robbins_monro_small_tau_clamped(tau):
+    """tau=0 used to return inf at t=0 (``0 ** -kappa``) — one such step
+    replaces the posterior state with inf — and any tau < 1 exceeded the
+    documented ``rho_0 <= 1``.  The schedule is clamped to 1.0."""
+    rhos = [robbins_monro(t, tau=tau, kappa=0.7) for t in range(50)]
+    assert np.isfinite(rhos).all()
+    assert all(0.0 < r <= 1.0 for r in rhos)
+    assert rhos[0] == 1.0
+    assert all(a >= b for a, b in zip(rhos, rhos[1:]))
+
+
+def test_svi_tau_zero_fit_stays_finite(lda_program):
+    """Regression: SVIConfig accepts tau=0, so the first step must be a
+    finite rho=1 natural-gradient step, not a state-destroying inf."""
+    svi = SVI(lda_program, SVIConfig(batch_size=16, tau=0.0, seed=0))
+    state, history = svi.fit(steps=3)
+    assert np.isfinite(history["elbo"]).all()
+    for p in state.posteriors.values():
+        assert np.isfinite(np.asarray(p)).all()
+
+
+def test_sviconfig_validates_constant_rho():
+    """The constant-rho override is validated like the schedule it
+    replaces: rho outside (0, 1] diverges silently."""
+    for bad in (2.0, 1.5, 0.0, -1.0):
+        with pytest.raises(ValueError, match="rho"):
+            SVIConfig(rho=bad)
+    assert SVIConfig(rho=1.0).rho == 1.0
+    assert SVIConfig(rho=0.3, kappa=7.0).rho == 0.3   # kappa unused w/ rho
+
+
 def test_svi_heldout_elbo_matches_batch_vmp(lda_program):
     """On a planted corpus the streaming engine must converge to (within
     tolerance of) the full-batch optimum, measured by held-out per-token
