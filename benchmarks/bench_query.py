@@ -1,0 +1,113 @@
+"""Query/serving-layer benchmark: fold-in throughput and compile behavior.
+
+Protocol: fit a short SVI run on a planted corpus, freeze the posterior,
+then measure the query layer the way a server exercises it —
+
+  - **cold vs warm compile**: first score at a fresh length bucket (pays
+    the jit) vs the same bucket warm (the steady serving state);
+  - **batched fold-in throughput sweep**: B unseen documents scored as one
+    batch, B in {1, 8, 32, 128} — the padded-bucket batched dispatch the
+    QueryServer amortizes compiles and python/dispatch overhead with;
+  - **one-doc-at-a-time baseline**: the same documents scored
+    individually (warm cache, same bucket — purely the batching win).
+
+The headline derived number, ``batched_speedup_x`` on the
+``query_foldin_batched_vs_single`` row, is the acceptance bar for the
+serving layer (warm batched >= 5x one-at-a-time).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import make_engine, models
+from repro.data import SyntheticCorpus
+from repro.query import FoldIn, FoldInConfig
+
+K, V = 16, 2000
+N_TRAIN_DOCS = 600
+N_QUERY_DOCS = 128
+LOCAL_ITERS = 5
+
+
+def _fit_posterior():
+    corpus = SyntheticCorpus(n_docs=N_TRAIN_DOCS, vocab=V, n_topics=K,
+                             mean_len=120, seed=0).generate()
+    m = models.make("lda", alpha=0.1, beta=0.05, K=K, V=V)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    result = make_engine("svi", steps=30, batch_size=128, seed=0).fit(m)
+    return result.freeze(m)
+
+
+def _query_docs():
+    unseen = SyntheticCorpus(n_docs=N_QUERY_DOCS, vocab=V, n_topics=K,
+                             mean_len=120, seed=7).generate()
+    offs = np.concatenate([[0], np.cumsum(unseen["lengths"])])
+    docs = [unseen["tokens"][offs[i]:offs[i + 1]]
+            for i in range(N_QUERY_DOCS)]
+    return docs, unseen["lengths"]
+
+
+def run(report):
+    post = _fit_posterior()
+    docs, lengths = _query_docs()
+
+    fold = FoldIn(post, FoldInConfig(local_iters=LOCAL_ITERS))
+
+    # cold vs warm: one batch shape, first call compiles
+    batch32 = np.concatenate(docs[:32])
+    t0 = time.time()
+    fold.score(batch32, lengths=lengths[:32])
+    cold = time.time() - t0
+    t0 = time.time()
+    r = fold.score(batch32, lengths=lengths[:32])
+    warm = time.time() - t0
+    report("query_foldin_cold_compile", cold * 1e6,
+           f"docs=32;buckets={fold.compiled_buckets}")
+    report("query_foldin_warm", warm * 1e6,
+           f"docs=32;warm_speedup={cold / max(warm, 1e-9):.1f}x;"
+           f"per_token_ll={r.per_token_ll:.4f}",
+           cold_us=round(cold * 1e6, 2),
+           warm_speedup_x=round(cold / max(warm, 1e-9), 2))
+
+    # batched throughput sweep (warm: one priming call per bucket)
+    tput = {}
+    for b in (1, 8, 32, 128):
+        vals = np.concatenate(docs[:b])
+        lens = lengths[:b]
+        fold.score(vals, lengths=lens)               # prime the bucket
+        iters = max(2, 64 // b)
+        t0 = time.time()
+        for _ in range(iters):
+            fold.score(vals, lengths=lens)
+        dt = (time.time() - t0) / iters
+        tput[b] = b / dt
+        report(f"query_foldin_batch{b:03d}", dt * 1e6,
+               f"docs_per_s={tput[b]:.1f};"
+               f"tokens={int(lens.sum())}",
+               docs_per_s=round(tput[b], 2), batch_docs=b)
+
+    # one-doc-at-a-time baseline: same 32 docs, individually, warm
+    for d in docs[:32]:
+        fold.score(d)                                # prime every bucket
+    t0 = time.time()
+    for d in docs[:32]:
+        fold.score(d)
+    dt_single = time.time() - t0
+    single_tput = 32 / dt_single
+    report("query_foldin_one_at_a_time", dt_single / 32 * 1e6,
+           f"docs_per_s={single_tput:.1f}",
+           docs_per_s=round(single_tput, 2))
+
+    best = max(tput.values())
+    speedup = best / single_tput
+    report("query_foldin_batched_vs_single", 0.0,
+           f"batched_speedup_x={speedup:.1f};"
+           f"best_batched_docs_per_s={best:.1f};"
+           f"single_docs_per_s={single_tput:.1f};"
+           f"compiled_buckets={fold.compiled_buckets}",
+           batched_speedup_x=round(speedup, 2),
+           best_batched_docs_per_s=round(best, 2),
+           single_docs_per_s=round(single_tput, 2))

@@ -12,6 +12,9 @@
     bench_outofcore  sharded on-disk corpus at 8x bench_svi's, streamed to
                      the same held-out ELBO target at a bounded resident
                      working set (+ bitwise sharded-vs-resident check)
+    bench_query      query/serving layer: fold-in throughput sweep across
+                     batch sizes, cold-vs-warm compile, batched-vs-single
+                     speedup (the serving acceptance bar)
 
 Prints ``name,us_per_call,derived`` CSV.  Select modules with
 ``python -m benchmarks.run [vmp|scaling|partition|kernels] ...``.
@@ -30,10 +33,12 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_kernels, bench_outofcore, bench_partition,
-                            bench_scaling, bench_svi, bench_vmp)
+                            bench_query, bench_scaling, bench_svi,
+                            bench_vmp)
     mods = {"vmp": bench_vmp, "scaling": bench_scaling,
             "partition": bench_partition, "kernels": bench_kernels,
-            "svi": bench_svi, "outofcore": bench_outofcore}
+            "svi": bench_svi, "outofcore": bench_outofcore,
+            "query": bench_query}
     args = sys.argv[1:]
     json_mode = "--json" in args
     picks = [a for a in args if a in mods] or list(mods)

@@ -39,6 +39,10 @@ def main():
                          "synthetic corpus on first use, then minibatches "
                          "stream from its shards (docs/data_pipeline.md)")
     ap.add_argument("--ckpt", default="/tmp/inferspark_lda_ck")
+    ap.add_argument("--save-posterior", default=None, metavar="DIR",
+                    help="freeze the fitted posterior into a servable "
+                         "artifact at DIR (docs/query_serving.md); "
+                         "query it with examples/query_topics.py")
     args = ap.parse_args()
 
     n_docs = max(10, args.words // 120)
@@ -90,7 +94,8 @@ def main():
     shutil.rmtree(args.ckpt, ignore_errors=True)
     t0 = time.time()
 
-    if args.engine == "vmp" and args.holdout == 0:
+    if args.engine == "vmp" and args.holdout == 0 \
+            and args.save_posterior is None:
         def progress(i, elbo):
             if i % 10 == 0:
                 print(f"[lda] iter {i:3d}  ELBO {elbo:16.1f}  "
@@ -126,6 +131,17 @@ def main():
             print(f"[lda] held-out per-token ELBO: "
                   f"{result.heldout_elbo:.4f}")
         est = result.topics("phi")
+        if args.save_posterior:
+            prog = None
+            if store is not None:
+                from repro.data.store import sharded_template
+                prog = sharded_template(m, store)
+            post = result.freeze(m, program=prog)
+            post.save(args.save_posterior)
+            print(f"[lda] posterior artifact at {args.save_posterior}: "
+                  f"{sorted(post.posteriors)} "
+                  f"(query it: PYTHONPATH=src python "
+                  f"examples/query_topics.py {args.save_posterior})")
 
     # topic recovery vs the planted topics (TV distance, greedy matched)
     from repro.core import aligned_tv

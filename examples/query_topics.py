@@ -1,0 +1,102 @@
+"""Query a frozen posterior artifact: the serve half of train-once/query-many.
+
+    PYTHONPATH=src python examples/lda_topics.py --engine svi --iters 30 \
+        --words 50000 --save-posterior /tmp/lda_posterior
+    PYTHONPATH=src python examples/query_topics.py /tmp/lda_posterior
+
+Loads the artifact (no engine, no training corpus), answers statistical
+queries straight from it (top words per topic, credible intervals, topic
+similarity), then folds in unseen documents through the micro-batching
+query server with a handful of concurrent clients and prints the serving
+stats.  See docs/query_serving.md.
+"""
+
+import argparse
+import threading
+
+import numpy as np
+
+from repro.data import SyntheticCorpus
+from repro.query import FoldIn, FoldInConfig, Posterior, QueryClient, \
+    QueryServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact", help="posterior artifact directory "
+                                     "(lda_topics.py --save-posterior)")
+    ap.add_argument("--top", type=int, default=8,
+                    help="words per topic to print")
+    ap.add_argument("--query-docs", type=int, default=64,
+                    help="unseen documents to fold in")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="concurrent query clients")
+    ap.add_argument("--local-iters", type=int, default=10)
+    args = ap.parse_args()
+
+    post = Posterior.load(args.artifact)
+    meta = post.meta
+    print(f"[query] artifact: model={post.model} params={post.params} "
+          f"backend={meta.get('backend')} "
+          f"heldout={meta.get('heldout_elbo')}")
+
+    # -- statistical queries straight off the artifact --------------------
+    idx, probs = post.top_k("phi", args.top)
+    lo, hi = post.credible_interval("phi", 0.9)
+    print(f"[query] top-{args.top} words per topic "
+          f"(word:mean [90% CI of the top word]):")
+    for k in range(idx.shape[0]):
+        words = " ".join(f"{w}:{p:.3f}" for w, p in zip(idx[k], probs[k]))
+        w0 = idx[k, 0]
+        print(f"  topic {k:2d}: {words}   "
+              f"[{lo[k, w0]:.3f}, {hi[k, w0]:.3f}]")
+    sim = post.similarity("phi")
+    off = sim - np.eye(len(sim))
+    i, j = np.unravel_index(np.argmax(off), off.shape)
+    print(f"[query] most similar topic pair: ({i}, {j}) "
+          f"hellinger-affinity {sim[i, j]:.3f}")
+
+    # -- fold in unseen documents through the server -----------------------
+    k_topics, vocab = post.posteriors["phi"].shape
+    unseen = SyntheticCorpus(n_docs=args.query_docs, vocab=vocab,
+                             n_topics=k_topics, mean_len=100,
+                             seed=123).generate()
+    offs = np.concatenate([[0], np.cumsum(unseen["lengths"])])
+    docs = [unseen["tokens"][offs[i]:offs[i + 1]]
+            for i in range(args.query_docs)]
+
+    fold = FoldIn(post, FoldInConfig(local_iters=args.local_iters))
+    with QueryServer(fold, max_batch_docs=32, max_delay_s=0.005) as srv:
+        client = QueryClient(srv)
+        results = [None] * len(docs)
+
+        def run(lo_i, hi_i):
+            for i in range(lo_i, hi_i):
+                results[i] = client.score(docs[i])
+
+        per = -(-len(docs) // args.clients)
+        threads = [threading.Thread(target=run,
+                                    args=(c * per,
+                                          min((c + 1) * per, len(docs))))
+                   for c in range(args.clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = srv.stats()
+
+    lls = np.array([r.per_token_ll for r in results])
+    top_topic = [int(np.argmax(r.mixtures["theta"][0])) for r in results[:8]]
+    print(f"[query] folded in {len(docs)} unseen docs: per-token LL "
+          f"mean {lls.mean():.4f} (perplexity {np.exp(-lls.mean()):.1f}); "
+          f"MAP topic of first docs: {top_topic}")
+    print(f"[query] serving: {stats['requests']} requests in "
+          f"{stats['batches']} batches (mean {stats['mean_batch_docs']:.1f} "
+          f"docs/batch), p50 {stats['latency_p50_ms']:.0f} ms, "
+          f"p95 {stats['latency_p95_ms']:.0f} ms, "
+          f"{stats['docs_per_s']:.1f} docs/s, "
+          f"{stats['compiled_buckets']} compiled buckets")
+
+
+if __name__ == "__main__":
+    main()

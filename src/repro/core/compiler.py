@@ -496,5 +496,9 @@ def sliced_shadow(program: VMPProgram, caps: dict[str, int]) -> VMPProgram:
                                    children=children, group=None))
     meta = dict(program.meta)
     meta["slice_of"] = program.name
+    # caches keyed to the *original* program's shapes must not leak into
+    # the shadow through the shallow meta copy (the shadow's sliced axes
+    # have different extents)
+    meta.pop("_zstats_bucketing", None)
     return dc.replace(program, dirichlets=new_dirs, latents=new_lats,
                       meta=meta)

@@ -78,6 +78,10 @@ class InferenceResult:
     def topics(self, name: str) -> np.ndarray:
         """Row-normalized posterior-mean distribution for a Dirichlet RV —
         directly comparable across variational and sampling backends."""
+        if name not in self.posteriors:
+            raise KeyError(
+                f"no posterior for RV {name!r} in this {self.backend} "
+                f"result; available: {sorted(self.posteriors)}")
         p = np.asarray(self.posteriors[name], np.float64)
         if self.meta.get("normalized"):
             return p
@@ -86,6 +90,18 @@ class InferenceResult:
     @property
     def heldout_elbo(self) -> float:
         return self.heldout_trace[-1][1] if self.heldout_trace else float("nan")
+
+    def freeze(self, model, program=None, note: str = ""):
+        """Freeze this result into a servable
+        :class:`repro.query.Posterior` artifact (posterior concentrations
+        + model/program provenance; see ``docs/query_serving.md``).
+        ``model`` is the fitted :class:`~repro.core.dsl.Model`;
+        ``program`` overrides ``model.compile()`` when the model itself
+        was never observed (the out-of-core path — pass its
+        ``sharded_template``)."""
+        from repro.query import Posterior
+        return Posterior.from_result(self, model, program=program,
+                                     note=note)
 
 
 class InferenceEngine:
@@ -194,7 +210,14 @@ def _fit_svi(model, cfg: EngineConfig, full_batch: bool) -> InferenceResult:
 
 class GibbsEngine(InferenceEngine):
     """Blocked Gibbs sampling for LDA-shaped models (one latent selector
-    with a single specialized child and a per-group prior Dirichlet)."""
+    with a single specialized child and a per-group prior Dirichlet).
+
+    With ``holdout_frac > 0`` the held-out documents (the same
+    ``holdout_split`` as the variational engines, so the splits coincide
+    at equal seeds) are excluded from the sweeps and scored afterwards by
+    the query layer's fold-in engine against the frozen posterior-mean
+    ``phi`` concentrations — populating ``heldout_trace`` with the same
+    per-token ELBO metric the other backends report."""
 
     name = "gibbs"
 
@@ -209,14 +232,45 @@ class GibbsEngine(InferenceEngine):
         theta_d = program.dirichlets[spec.prior_dir]
         phi_d = program.dirichlets[child.dir_name]
         burnin = cfg.burnin if cfg.burnin is not None else cfg.steps // 2
-        theta, phi, lls = gibbs_lda(
-            child.values, spec.prior_rows, spec.k, phi_d.k,
+        values, doc_rows = child.values, spec.prior_rows
+        train = holdout = None
+        if cfg.holdout_frac > 0:
+            from repro.data.pipeline import holdout_split
+            train, holdout = holdout_split(theta_d.g, cfg.holdout_frac,
+                                           cfg.seed)
+            member = np.zeros(theta_d.g, bool)
+            member[train] = True
+            tm = member[doc_rows]
+            values = values[tm]
+            doc_rows = np.searchsorted(train, doc_rows[tm])
+        theta, phi, lls, (theta_conc, phi_conc) = gibbs_lda(
+            values, doc_rows, spec.k, phi_d.k,
             alpha=float(theta_d.prior[0]), beta=float(phi_d.prior[0]),
-            iters=cfg.steps, burnin=burnin, seed=cfg.seed, thin=cfg.thin)
+            iters=cfg.steps, burnin=burnin, seed=cfg.seed, thin=cfg.thin,
+            return_conc=True)
         posts = {spec.prior_dir: theta, child.dir_name: phi}
-        return InferenceResult(self.name, posts, list(lls), [],
-                               {"normalized": True, "burnin": burnin,
-                                "steps": cfg.steps})
+        meta = {"normalized": True, "burnin": burnin, "steps": cfg.steps,
+                "concentrations": {spec.prior_dir: theta_conc,
+                                   child.dir_name: phi_conc}}
+        result = InferenceResult(self.name, posts, list(lls), [], meta)
+        if cfg.holdout_frac > 0:
+            meta["n_train_groups"] = len(train)
+            meta["n_holdout_groups"] = len(holdout)
+            meta["train_groups"] = train
+            from repro.query import FoldIn, FoldInConfig
+            fold = FoldIn(result.freeze(model, program=program),
+                          FoldInConfig(
+                              local_iters=cfg.holdout_local_iters,
+                              bucket=None),
+                          model=model)
+            hm = ~member[spec.prior_rows]
+            score = fold.score(
+                child.values[hm],
+                segment_ids=np.searchsorted(holdout,
+                                            spec.prior_rows[hm]))
+            result.heldout_trace.append((cfg.steps - 1,
+                                         score.per_token_ll))
+        return result
 
 
 def _lda_shape(program: VMPProgram):

@@ -27,9 +27,15 @@ import numpy as np
 
 def gibbs_lda(tokens, doc_ids, K: int, V: int, alpha: float = 0.1,
               beta: float = 0.05, iters: int = 200, burnin: int = 100,
-              seed: int = 0, thin: int = 1):
+              seed: int = 0, thin: int = 1, return_conc: bool = False):
     """Returns posterior-mean estimates (theta (D,K), phi (K,V)) and the
-    per-iteration complete-data log-likelihood trace."""
+    per-iteration complete-data log-likelihood trace.
+
+    With ``return_conc=True`` a fourth value is appended: the posterior-mean
+    Dirichlet *concentrations* ``(alpha + E[cnt_d], beta + E[cnt_k])`` over
+    the kept sweeps — the sampling-backend analogue of the variational
+    engines' posterior concentration tables, which is what the query
+    layer's fold-in scorer consumes (``repro.query``)."""
     tokens = jnp.asarray(tokens, jnp.int32)
     docs = jnp.asarray(doc_ids, jnp.int32)
     n = tokens.shape[0]
@@ -56,17 +62,30 @@ def gibbs_lda(tokens, doc_ids, K: int, V: int, alpha: float = 0.1,
         ll = (jnp.log(jnp.maximum(
             (theta[docs] * phi[:, tokens].T).sum(-1), 1e-30))).sum()
         keep = (it >= burnin) & ((it - burnin) % thin == 0)
-        return (key, theta, phi), (ll, keep, theta, phi)
+        out = (ll, keep, theta, phi)
+        # trace-time bool: the (iters, D, K) / (iters, K, V) concentration
+        # stacks are only materialized when a caller wants them
+        if return_conc:
+            out = out + (alpha + cnt_d, beta + cnt_k)
+        return (key, theta, phi), out
 
     key = jax.random.PRNGKey(seed)
     k0, k1, key = jax.random.split(key, 3)
     theta0 = sample_dirichlet(k0, jnp.full((d, K), alpha + 1.0))
     phi0 = sample_dirichlet(k1, jnp.full((K, V), beta + 1.0))
 
-    (_, _, _), (lls, keeps, thetas, phis) = jax.lax.scan(
-        sweep, (key, theta0, phi0), jnp.arange(iters))
+    (_, _, _), outs = jax.lax.scan(sweep, (key, theta0, phi0),
+                                   jnp.arange(iters))
+    lls, keeps, thetas, phis = outs[:4]
     w = keeps.astype(jnp.float32)
     denom = jnp.maximum(w.sum(), 1.0)
     theta_mean = (thetas * w[:, None, None]).sum(0) / denom
     phi_mean = (phis * w[:, None, None]).sum(0) / denom
+    if return_conc:
+        tconcs, pconcs = outs[4:]
+        theta_conc = (tconcs * w[:, None, None]).sum(0) / denom
+        phi_conc = (pconcs * w[:, None, None]).sum(0) / denom
+        return (np.asarray(theta_mean), np.asarray(phi_mean),
+                np.asarray(lls), (np.asarray(theta_conc),
+                                  np.asarray(phi_conc)))
     return np.asarray(theta_mean), np.asarray(phi_mean), np.asarray(lls)

@@ -188,8 +188,14 @@ def build_layout(program: VMPProgram, m: int) -> _Layout:
                             "mask": mask}
         shadow_statics.append(s)
 
+    # fresh meta: per-program caches (e.g. the hoisted zstats bucketing)
+    # are keyed to the original shapes and must not leak into the
+    # differently-shaped per-shard shadow
+    meta = {k: v for k, v in program.meta.items()
+            if k != "_zstats_bucketing"}
     shadow = dataclasses.replace(program, dirichlets=shadow_dirs,
-                                 latents=shadow_lats, statics=shadow_statics)
+                                 latents=shadow_lats,
+                                 statics=shadow_statics, meta=meta)
     return _Layout(m, group_shard, frozenset(local_dirs), dir_row, lat,
                    arrays, shadow)
 
@@ -325,7 +331,9 @@ def _make_gspmd_step(program: VMPProgram, plan: ShardingPlan, seed: int,
                               children=[dc.replace(f, n_z=pad_n[spec.name])
                                         for f in spec.children])
                    for spec in program.latents]
-    shadow = dc.replace(program, latents=shadow_lats)
+    shadow = dc.replace(program, latents=shadow_lats,
+                        meta={k: v for k, v in program.meta.items()
+                              if k != "_zstats_bucketing"})
 
     def body(state, arrays):
         return _step_body(shadow, arrays, state, elog_dtype=elog_dtype)

@@ -300,14 +300,43 @@ def device_batch(program: VMPProgram, groups, caps_fn=None, plan=None,
 # held-out ELBO
 # ---------------------------------------------------------------------------
 
-def _build_heldout_fn(program: VMPProgram, caps: dict[str, int],
-                      inner_iters: int):
+def build_local_scorer(program: VMPProgram, caps: dict[str, int],
+                       inner_iters: int, *, extras: bool = False,
+                       n_seg: int = 0):
+    """Compile the frozen-globals local-inference evaluator: fresh local
+    posteriors start at the prior, take ``inner_iters`` coordinate-ascent
+    passes with the global Dirichlets frozen at the caller's values, and
+    the global Dirichlets' KL terms (training-objective bookkeeping, not
+    predictive quality) are excluded from the returned score.
+
+    This is the machinery behind both the SVI convergence signal
+    (:func:`heldout_elbo`) and the query layer's fold-in engine
+    (``repro.query.foldin``) — one compile per ``caps`` signature, every
+    batch padded to the same caps reuses the trace.
+
+    ``extras=False`` (the held-out ELBO path) returns a jitted
+    ``fn(posteriors, arrays) -> elbo`` — ``posteriors`` need only hold the
+    global (non-local) Dirichlets; local entries, if present, are ignored.
+
+    ``extras=True`` (the fold-in path) returns a jitted
+    ``fn(posteriors, arrays, seg) -> (elbo, locals, group_elbo)`` where
+    ``elbo`` is the same scalar (identical ops, so it stays bitwise with
+    the extras=False build at matching caps/iters), ``locals`` maps each
+    local Dirichlet to its fitted ``(caps[name], k)`` posterior
+    concentrations (MAP mixtures after normalization), and ``group_elbo``
+    is the ``(n_seg,)`` per-partition-group decomposition of the score:
+    per-instance logsumexp terms plus each group's local-Dirichlet ELBO
+    terms, segment-summed by the ``seg`` arrays (one ``(cap,) int32``
+    group-id array per latent / static / local Dirichlet, out-of-range
+    ids dropped).  ``group_elbo.sum()`` equals ``elbo`` up to float
+    reassociation.
+    """
+    from repro.kernels import ops as kops
     local = local_dirichlets(program)
     shadow = sliced_shadow(program, caps)
     priors = _priors(program)
 
-    @jax.jit
-    def fn(posteriors, arrays):
+    def _local_init(posteriors):
         posts = {}
         for name, d in program.dirichlets.items():
             if name in local:
@@ -315,19 +344,75 @@ def _build_heldout_fn(program: VMPProgram, caps: dict[str, int],
                                                (caps[name], d.k))
             else:
                 posts[name] = posteriors[name]
+        return posts
+
+    def _fit_locals(posts, arrays):
         st = VMPState(posts, jnp.zeros((), jnp.int32))
         for _ in range(inner_iters):
             new, _ = _step_body(shadow, arrays, st)
             st = VMPState({n: (new.posteriors[n] if n in local
                                else posts[n]) for n in posts}, st.step)
         _, elbo = _step_body(shadow, arrays, st)
-        for name, d in program.dirichlets.items():
+        return st, elbo
+
+    def _drop_global_kl(elbo, posteriors):
+        for name in program.dirichlets:
             if name not in local:
                 elbo = elbo - dists.dirichlet_elbo_term(
                     priors[name], posteriors[name])
         return elbo
 
-    return fn
+    if not extras:
+        @jax.jit
+        def fn(posteriors, arrays):
+            st, elbo = _fit_locals(_local_init(posteriors), arrays)
+            return _drop_global_kl(elbo, posteriors)
+
+        return fn
+
+    from .vmp import _messages_to_latent
+
+    @jax.jit
+    def fn_extras(posteriors, arrays, seg):
+        st, elbo = _fit_locals(_local_init(posteriors), arrays)
+        elbo = _drop_global_kl(elbo, posteriors)
+
+        # per-group decomposition: an explicit (materializing) pass at the
+        # fitted locals — the fused elbo above stays the bitwise artifact
+        elog = {n: kops.dirichlet_expectation(p)
+                for n, p in st.posteriors.items()}
+        grp = jnp.zeros((n_seg,), jnp.float32)
+        for spec in shadow.latents:
+            logits = _messages_to_latent(shadow, spec, elog, arrays)
+            _, lse = kops.zstep(logits)
+            m = arrays[spec.name].get("mask")
+            if m is not None:
+                lse = lse * m
+            grp = grp + jax.ops.segment_sum(lse, seg[spec.name],
+                                            num_segments=n_seg)
+        for s in shadow.statics:
+            a = arrays[s.x_name]
+            e = elog[s.dir_name][a["rows"], a["values"]]
+            if a.get("mask") is not None:
+                e = e * a["mask"]
+            grp = grp + jax.ops.segment_sum(e, seg[s.x_name],
+                                            num_segments=n_seg)
+        for name in local:
+            post = st.posteriors[name]
+            prior = jnp.broadcast_to(priors[name], post.shape)
+            term = dists.dirichlet_log_norm(post) \
+                - dists.dirichlet_log_norm(prior) \
+                + ((prior - post) * elog[name]).sum(axis=-1)
+            grp = grp + jax.ops.segment_sum(term, seg[name],
+                                            num_segments=n_seg)
+        return elbo, {n: st.posteriors[n] for n in local}, grp
+
+    return fn_extras
+
+
+def _build_heldout_fn(program: VMPProgram, caps: dict[str, int],
+                      inner_iters: int):
+    return build_local_scorer(program, caps, inner_iters, extras=False)
 
 
 def heldout_elbo(program: VMPProgram, state: VMPState, groups,

@@ -137,6 +137,16 @@ def _step_body(program: VMPProgram, arrays: dict, state: VMPState,
     stats = {n: jnp.zeros((d.g, d.k), jnp.float32)
              for n, d in program.dirichlets.items()}
 
+    # host-precomputed streamed-table bucketing: the permutation depends
+    # only on the program's static observed values, so it is computed once
+    # (numpy, off-device) and cached on the program; the sliced/SVI path,
+    # whose index streams are tracers, caches None and keeps the in-trace
+    # fallback.  Keyed per (latent name, token count): a differently
+    # shaped view of the program (a per-shard or padded shadow sharing
+    # this meta dict) can never pick up a permutation computed for
+    # another extent.
+    bcache = program.meta.setdefault("_zstats_bucketing", {})
+
     for spec in program.latents:
         children = tuple(
             kops.ZChild(elog=amsg[f.dir_name],
@@ -146,9 +156,15 @@ def _step_body(program: VMPProgram, arrays: dict, state: VMPState,
                         base=arrays[f.x_name].get("base"),
                         mask=arrays[f.x_name].get("mask"))
             for f in spec.children)
+        bkey = (spec.name, arrays[spec.name]["prior_rows"].shape[0])
+        if bkey not in bcache:
+            bcache[bkey] = kops.host_bucketing(
+                amsg[spec.prior_dir], arrays[spec.name]["prior_rows"],
+                children, tables="alpha")
         lse_sum, pstats, cstats = kops.zstats(
             amsg[spec.prior_dir], arrays[spec.name]["prior_rows"], children,
-            zmask=arrays[spec.name].get("mask"), tables="alpha")
+            zmask=arrays[spec.name].get("mask"), tables="alpha",
+            bucketing=bcache[bkey])
         elbo = elbo + lse_sum
         # prior-factor stats (theta <- z)
         stats[spec.prior_dir] = stats[spec.prior_dir] + pstats

@@ -63,6 +63,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -309,6 +310,58 @@ def _bucket(key, n: int, tl: int, n_tiles: int, bn: int):
     return src, slot_tile, slot_tile[::bn]
 
 
+def _bucket_host(key: np.ndarray, n: int, tl: int, n_tiles: int, bn: int):
+    """Numpy twin of :func:`_bucket`, op-for-op (stable sort, identical
+    padding arithmetic), so a bucketing computed once on the host is
+    bitwise the one the traced version would produce.  The permutation
+    depends only on the observed values, so for a fixed program it never
+    changes — computing it here keeps the argsort out of the jitted step
+    (where the traced version re-sorts on device every iteration)."""
+    tid = (key.astype(np.int64) // tl).astype(np.int32)
+    order = np.argsort(tid, kind="stable")
+    cnt = np.bincount(tid, minlength=n_tiles)
+    pcnt = np.maximum(-(-cnt // bn), 1) * bn
+    cum_p = np.cumsum(pcnt)
+    off = cum_p - pcnt
+    cstart = np.cumsum(cnt) - cnt
+    tid_s = tid[order]
+    pos = off[tid_s] + (np.arange(n) - cstart[tid_s])
+    np_ = (-(-n // bn) + n_tiles) * bn
+    src = np.full((np_,), -1, np.int32)
+    src[pos] = order.astype(np.int32)
+    slot_tile = np.clip(np.searchsorted(cum_p, np.arange(np_),
+                                        side="right"),
+                        0, n_tiles - 1).astype(np.int32)
+    return src, slot_tile, slot_tile[::bn].copy()
+
+
+def host_bucketing(table_prior, prior_rows, children, *,
+                   tables: str = "elog", block_n: Optional[int] = None):
+    """Precompute the streamed-table path's token bucketing on the host.
+
+    Returns the ``(src, slot_tile, blk_tile)`` numpy triple that
+    ``zstats(..., bucketing=...)`` consumes, or ``None`` when there is
+    nothing to hoist: the call is not fusable, no table is streamed
+    (resident layout needs no bucketing), or the bucketing key (the prior
+    rows / streamed child's observed values) is a tracer rather than a
+    concrete array.  Only shapes of the tables are inspected, so the
+    *tables* themselves may be tracers — callers inside a jit trace can
+    hoist as long as the observed index streams are trace-time constants
+    (the full-batch engine's case; ``core/vmp.py:_step_body`` caches the
+    result per program)."""
+    if any(c.zmap is not None for c in children):
+        return None
+    plan = _plan(table_prior, children, tables, block_n)
+    if plan is None or plan.target is None:
+        return None
+    key = prior_rows if plan.target == "prior" \
+        else children[plan.target].values
+    if isinstance(key, jax.core.Tracer):
+        return None
+    key = np.asarray(key)
+    return _bucket_host(key, key.shape[0], plan.tl, plan.n_tiles, plan.bn)
+
+
 def fusable(table_prior, children, tables: str = "elog",
             n_latent: int | None = None) -> bool:
     """True when the fused kernels support this latent.  Large tables are
@@ -461,7 +514,8 @@ class _Layout(NamedTuple):
 
 
 def _layout(table_prior, prior_rows, children, zmask, *,
-            tables: str = "elog", block_n: Optional[int] = None) -> _Layout:
+            tables: str = "elog", block_n: Optional[int] = None,
+            bucketing=None) -> _Layout:
     plan = _plan(table_prior, children, tables, block_n)
     if plan is None:
         raise ValueError("not fusable: several over-budget tables, a "
@@ -486,6 +540,18 @@ def _layout(table_prior, prior_rows, children, zmask, *,
                                jnp.full((np_ - n,), -1, jnp.int32)])
         slot_tile = jnp.zeros((np_,), jnp.int32)
         blk_tile = jnp.zeros((np_ // bn,), jnp.int32)
+    elif bucketing is not None:
+        # host-precomputed permutation (see host_bucketing): enters the
+        # trace as constants, so the per-step device argsort disappears
+        src, slot_tile, blk_tile = (jnp.asarray(b, jnp.int32)
+                                    for b in bucketing)
+        np_ = src.shape[0]
+        expect = (-(-n // bn) + plan.n_tiles) * bn
+        if np_ != expect:
+            raise ValueError(
+                f"stale bucketing: {np_} padded slots for a layout that "
+                f"needs {expect} (n={n}, bn={bn}, tiles={plan.n_tiles}) — "
+                f"recompute host_bucketing for this program")
     else:
         src, slot_tile, blk_tile = _bucket(key.astype(jnp.int32), n,
                                            plan.tl, plan.n_tiles, bn)
@@ -618,7 +684,8 @@ def _zstats_call(lo: _Layout, extra=None, emit_r: bool = False,
 
 def zstats(table_prior: jax.Array, prior_rows: jax.Array, children: tuple,
            zmask=None, *, tables: str = "elog",
-           block_n: int | None = None, interpret: bool = False):
+           block_n: int | None = None, interpret: bool = False,
+           bucketing=None):
     """Pallas-backed fused z-substep; matches ``ref.zstats`` (flat case).
 
     ``tables="elog"`` gathers from Elog tables as given; ``tables="alpha"``
@@ -626,12 +693,14 @@ def zstats(table_prior: jax.Array, prior_rows: jax.Array, children: tuple,
     ``dirichlet_expectation`` into the gather.  Tables too large for the
     VMEM budget are streamed tile-by-tile (see the module docstring);
     segment latents (zmap) belong to ``fused_zmap.zstats_zmap``.
+    ``bucketing`` — an optional :func:`host_bucketing` result: the
+    streamed path's token permutation, hoisted out of the trace.
     """
     if any(c.zmap is not None for c in children):
         raise ValueError("segment latents (zmap) take the two-phase "
                          "fused_zmap kernel; use ops.zstats")
     lo = _layout(table_prior, prior_rows, children, zmask,
-                 tables=tables, block_n=block_n)
+                 tables=tables, block_n=block_n, bucketing=bucketing)
     outs = _zstats_call(lo, interpret=interpret)
     plan = lo.plan
     lse_blocks, pstats = outs[0], outs[1]
@@ -640,4 +709,5 @@ def zstats(table_prior: jax.Array, prior_rows: jax.Array, children: tuple,
     return lse_blocks.sum(), pstats[:plan.gp, :plan.k], cstats
 
 
-__all__ = ["ZChild", "zstats", "fusable", "rowsum_digamma"]
+__all__ = ["ZChild", "zstats", "fusable", "host_bucketing",
+           "rowsum_digamma"]

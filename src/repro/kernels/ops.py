@@ -80,8 +80,22 @@ def zstep(logits: jax.Array):
     return _zstep_pallas(logits, interpret=(b == "pallas_interpret"))
 
 
+def host_bucketing(table_prior, prior_rows, children, *,
+                   tables: str = "elog"):
+    """Precompute the streamed-table token bucketing for a :func:`zstats`
+    call whose observed index streams are trace-time constants (the
+    full-batch engine's arrays).  Returns the numpy triple to pass back as
+    ``zstats(..., bucketing=...)``, or ``None`` when there is nothing to
+    hoist (ref backend, resident layout, zmap children, or traced index
+    streams) — ``None`` is always safe to pass through."""
+    if _backend() == "ref":
+        return None
+    from .fused_zstats import host_bucketing as _hb
+    return _hb(table_prior, prior_rows, children, tables=tables)
+
+
 def zstats(table_prior: jax.Array, prior_rows: jax.Array, children: tuple,
-           zmask=None, *, tables: str = "elog"):
+           zmask=None, *, tables: str = "elog", bucketing=None):
     """Fused token-plate substep: ``(lse_sum, prior_stats, child_stats)``.
 
     Inputs: ``table_prior`` — the ``(G, K)`` prior-Dirichlet table;
@@ -99,6 +113,11 @@ def zstats(table_prior: jax.Array, prior_rows: jax.Array, children: tuple,
     ``prior_stats`` — ``(G, K)`` float32 responsibility scatters onto the
     prior rows; ``child_stats`` — per child a ``(Gc, Kc)`` float32 stats
     table.
+
+    ``bucketing`` — an optional :func:`host_bucketing` result: the
+    streamed-table path's token permutation precomputed on the host (and
+    cached per program by ``_step_body``), so the per-step device argsort
+    it replaces never enters the trace.
 
     The hot path of every VMP/SVI iteration (see ``core/vmp.py:_step_body``).
     On TPU the fused Pallas kernels keep responsibilities out of HBM:
@@ -129,7 +148,8 @@ def zstats(table_prior: jax.Array, prior_rows: jax.Array, children: tuple,
             if fusable(table_prior, children, tables):
                 return _zstats_pallas(table_prior, prior_rows, children,
                                       zmask, tables=tables,
-                                      interpret=interp)
+                                      interpret=interp,
+                                      bucketing=bucketing)
     return ref.zstats(table_prior, prior_rows, children, zmask,
                       tables=tables)
 
@@ -147,5 +167,5 @@ def flash_attention(q, k, v, *, causal: bool = True):
                       interpret=(b == "pallas_interpret"))
 
 
-__all__ = ["ZChild", "dirichlet_expectation", "zstep", "zstats",
-           "flash_attention", "reset_backend_cache"]
+__all__ = ["ZChild", "dirichlet_expectation", "host_bucketing", "zstep",
+           "zstats", "flash_attention", "reset_backend_cache"]

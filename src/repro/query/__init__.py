@@ -1,0 +1,20 @@
+"""Posterior query & serving: everything downstream of ``fit()``.
+
+The train-once/query-many layer (see ``docs/query_serving.md``):
+
+  - :class:`Posterior` — frozen, versioned posterior artifacts with
+    direct statistical queries (means, credible intervals, top-k,
+    pairwise similarity); built via ``InferenceResult.freeze()``.
+  - :class:`FoldIn` — compiled local-only inference for unseen documents
+    (predictive log-likelihood, perplexity, MAP mixtures), one compile
+    per padded length bucket.
+  - :class:`QueryServer` / :class:`QueryClient` — micro-batched dispatch
+    of concurrent fold-in queries with latency/throughput accounting.
+"""
+
+from .foldin import FoldIn, FoldInConfig, FoldInResult  # noqa: F401
+from .posterior import FORMAT_VERSION, Posterior  # noqa: F401
+from .server import QueryClient, QueryResponse, QueryServer  # noqa: F401
+
+__all__ = ["Posterior", "FORMAT_VERSION", "FoldIn", "FoldInConfig",
+           "FoldInResult", "QueryServer", "QueryClient", "QueryResponse"]

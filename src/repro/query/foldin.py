@@ -1,0 +1,251 @@
+"""Compiled fold-in: score documents the engine never saw.
+
+Fold-in is held-out inference productionized: freeze the global Dirichlets
+at a :class:`~repro.query.posterior.Posterior`'s concentrations, give the
+unseen documents fresh local posteriors at the prior, run a fixed number
+of local-only VMP passes (the fused ``kernels/ops.py:zstats`` token-plate
+path — same hot loop as training), and read off
+
+  - the per-token predictive ELBO (global-KL terms excluded) and its
+    perplexity ``exp(-elbo/token)``,
+  - per-document scores (the ELBO's partition-group decomposition),
+  - MAP topic mixtures (the fitted local Dirichlet rows, normalized).
+
+The compute is :func:`repro.core.svi.build_local_scorer` — the *same*
+machinery as the SVI engine's held-out ELBO, so at matching bucket (exact
+shapes) and iteration settings a fold-in score of the engine's held-out
+documents reproduces ``InferenceResult.heldout_elbo`` **bitwise**
+(``tests/test_query.py``).
+
+Compilation is amortized with **padded length buckets**: every sliced axis
+is padded up to a power-of-two bucket (masked, update-invariant), so one
+jitted scorer serves every request that lands in the same bucket signature
+— the first request per bucket pays the compile, the rest run warm
+(``benchmarks/bench_query.py`` measures cold vs warm).  Host-side work per
+request is one numpy "metadata collection" pass (the paper's cheap stage);
+no re-tracing, no re-compiling.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from .posterior import Posterior
+
+
+@dataclasses.dataclass
+class FoldInConfig:
+    """Knobs of the fold-in scorer.
+
+    ``local_iters`` — local coordinate-ascent passes (match the engine's
+    ``holdout_local_iters`` for comparable/bitwise scores).
+    ``bucket`` — padding policy for the compiled-step cache:
+    ``"pow2"`` (default) pads every sliced axis up to
+    ``max(min_cap, next_pow2(n))`` so request shapes collapse onto few
+    compiles; ``None`` = exact shapes (one compile per distinct shape —
+    the bitwise-reference mode).
+    """
+    local_iters: int = 10
+    bucket: Optional[str] = "pow2"
+    min_cap: int = 64
+
+    def __post_init__(self):
+        if self.local_iters < 0:
+            raise ValueError("local_iters must be >= 0")
+        if self.bucket not in (None, "exact", "pow2"):
+            raise ValueError(f"unknown bucket policy {self.bucket!r}; "
+                             f"choose 'pow2', 'exact', or None")
+
+
+@dataclasses.dataclass
+class FoldInResult:
+    """One scored batch of documents."""
+    elbo: float                      # total score, global KLs excluded
+    n_tokens: int                    # observed instances scored
+    n_docs: int
+    per_token_ll: float              # elbo / n_tokens (nats per token)
+    perplexity: float                # exp(-per_token_ll)
+    doc_ll: np.ndarray               # (n_docs,) per-document decomposition
+    mixtures: dict[str, np.ndarray]  # local RV -> (rows, K) MAP mixtures
+    mixture_groups: dict[str, np.ndarray]  # local RV -> (rows,) doc of row
+    caps: dict                       # bucket signature this ran at
+
+
+class FoldIn:
+    """Score unseen documents against a frozen :class:`Posterior`.
+
+    ::
+
+        post = Posterior.load("/artifacts/lda")
+        fold = FoldIn(post)                       # rebuilds the model
+        res = fold.score(tokens, lengths=doc_lengths)
+        res.per_token_ll, res.perplexity, res.mixtures["theta"]
+
+    ``model`` overrides the zoo rebuild (``models.make(post.model,
+    **post.params)``) for models defined outside the zoo; any observations
+    on it are discarded (each query binds its own).
+    """
+
+    def __init__(self, posterior: Posterior, config: FoldInConfig = None,
+                 model=None):
+        import jax.numpy as jnp
+        self.posterior = posterior
+        self.cfg = config or FoldInConfig()
+        if model is None:
+            from repro.core import models
+            try:
+                model = models.make(posterior.model, **posterior.params)
+            except KeyError:
+                raise ValueError(
+                    f"model {posterior.model!r} is not in the zoo; pass "
+                    f"the defining Model via FoldIn(..., model=)") from None
+        self._proto = _blank_model(model)
+        self._globals = {n: jnp.asarray(v, jnp.float32)
+                         for n, v in posterior.globals().items()}
+        self._fns: dict = {}         # caps signature -> compiled scorer
+
+    # -- bucketing ---------------------------------------------------------
+
+    def _caps_fn(self, name: str, n: int) -> int:
+        if self.cfg.bucket in (None, "exact"):
+            return n
+        return max(self.cfg.min_cap, 1 << max(0, math.ceil(
+            math.log2(max(n, 1)))))
+
+    @property
+    def compiled_buckets(self) -> int:
+        """Distinct bucket signatures compiled so far (cache size)."""
+        return len(self._fns)
+
+    # -- scoring -----------------------------------------------------------
+
+    def score(self, values, segment_ids=None, lengths=None, *,
+              observed: str = None, bindings: dict = None) -> FoldInResult:
+        """Fold in one batch of documents and score it.
+
+        ``values`` — observed category indices, documents back to back;
+        ``segment_ids``/``lengths`` — the ragged document structure (as in
+        ``Model.observe``).  ``observed`` names the RV the data binds to
+        (optional when the artifact records exactly one); ``bindings``
+        supplies intermediate ``?``-plate parent maps (``Model.bind``, e.g.
+        SLDA's sentence->document map)."""
+        if observed is None:
+            if len(self.posterior.observed) != 1:
+                raise ValueError(
+                    f"artifact observes {list(self.posterior.observed)}; "
+                    f"pass observed= to pick the RV this data binds to")
+            observed = self.posterior.observed[0]
+        values = np.asarray(values, np.int32).ravel()
+        if segment_ids is None and lengths is None:
+            lengths = np.array([len(values)], np.int64)   # one document
+        model = copy.deepcopy(self._proto)
+        model[observed].observe(values, segment_ids=segment_ids,
+                                lengths=lengths)
+        for pname, ids in (bindings or {}).items():
+            model.bind(pname, ids)
+        program = model.compile()
+        self._check_globals(program)
+
+        n_docs = program.meta.get("pstar_size")
+        if not n_docs:
+            raise ValueError("fold-in needs a '?' partition plate "
+                             "(documents) in the model")
+        from repro.core.compiler import slice_arrays
+        caps_fn = None if self.cfg.bucket in (None, "exact") \
+            else self._caps_fn
+        arrays, dirs, caps, n_tok = slice_arrays(
+            program, np.arange(n_docs), caps_fn)
+        n_seg = self._caps_fn("__groups__", n_docs)
+        seg = _segment_arrays(program, caps, dirs, n_seg)
+
+        sig = (("__groups__", n_seg),) + tuple(sorted(caps.items()))
+        fn = self._fns.get(sig)
+        if fn is None:
+            from repro.core.svi import build_local_scorer
+            fn = build_local_scorer(program, caps, self.cfg.local_iters,
+                                    extras=True, n_seg=n_seg)
+            self._fns[sig] = fn
+
+        import jax.numpy as jnp
+        dev = {k: {kk: None if vv is None else jnp.asarray(vv)
+                   for kk, vv in v.items()} for k, v in arrays.items()}
+        seg_dev = {k: jnp.asarray(v) for k, v in seg.items()}
+        elbo, locs, grp = fn(self._globals, dev, seg_dev)
+
+        elbo = float(elbo)
+        mixtures, mix_groups = {}, {}
+        for name in self.posterior.local:
+            if name not in locs:
+                continue
+            d = program.dirichlets[name]
+            rows = np.asarray(locs[name])[:d.g]
+            mixtures[name] = rows / rows.sum(-1, keepdims=True)
+            mix_groups[name] = (np.asarray(d.group_rows, np.int64)
+                                if d.group_rows is not None
+                                else np.zeros(d.g, np.int64))
+        per_tok = elbo / n_tok if n_tok else float("nan")
+        return FoldInResult(
+            elbo=elbo, n_tokens=int(n_tok), n_docs=int(n_docs),
+            per_token_ll=per_tok,
+            perplexity=float(np.exp(-per_tok)) if n_tok else float("nan"),
+            doc_ll=np.asarray(grp)[:n_docs], mixtures=mixtures,
+            mixture_groups=mix_groups, caps=dict(caps))
+
+    def _check_globals(self, program):
+        for name, tab in self._globals.items():
+            d = program.dirichlets.get(name)
+            if d is None:
+                raise ValueError(
+                    f"artifact global {name!r} is not a Dirichlet of the "
+                    f"rebuilt model — artifact/model mismatch")
+            if (d.g, d.k) != tuple(tab.shape):
+                raise ValueError(
+                    f"artifact global {name!r} has shape "
+                    f"{tuple(tab.shape)}, the rebuilt model expects "
+                    f"({d.g}, {d.k}) — vocabulary/topic-count mismatch")
+
+
+def _blank_model(model):
+    """A deep copy of ``model`` with all observations/bindings dropped, so
+    each query binds its own data without inheriting the training corpus
+    (or its memory)."""
+    model = copy.copy(model)          # shallow: share nothing mutable below
+    model.net = copy.deepcopy(model.net)
+    model.observations = {}
+    model.plate_bindings = {}
+    model._program = None
+    model._state = None
+    model._step_fn = None
+    model._elbo_trace = []
+    for rv in model.net.rvs.values():
+        if getattr(rv, "observed", False):
+            rv.observed = False
+    return model
+
+
+def _segment_arrays(program, caps: dict, dirs: dict, n_seg: int) -> dict:
+    """Per-axis partition-group ids for the scorer's ``group_elbo``
+    decomposition, padded to ``caps`` with the out-of-range sentinel
+    ``n_seg`` (``segment_sum`` drops it).  Covers each latent plate, each
+    static factor, and each local Dirichlet's rows."""
+    from repro.core.compiler import _padded
+    seg = {}
+    for spec in program.latents:
+        g = np.asarray(spec.group, np.int32)
+        seg[spec.name] = _padded(g, caps[spec.name], fill=n_seg)
+    for s in program.statics:
+        g = np.asarray(s.group, np.int32)
+        seg[s.x_name] = _padded(g, caps[s.x_name], fill=n_seg)
+    for name, d in program.dirichlets.items():
+        if d.group_rows is None or name not in dirs:
+            continue
+        rows = np.asarray(dirs[name]["rows"], np.int64)
+        valid = rows < d.g
+        seg[name] = np.where(valid, d.group_rows[np.minimum(rows, d.g - 1)],
+                             n_seg).astype(np.int32)
+    return seg

@@ -1,0 +1,249 @@
+"""Micro-batching statistical-query server over a frozen posterior.
+
+The serving shape of the ROADMAP north star ("serve heavy traffic"):
+requests (each one or more documents to score) land on a queue; a single
+dispatch thread drains up to ``max_batch_docs`` of them (waiting at most
+``max_delay_s`` after the first), concatenates their documents into one
+fold-in batch, pads it to the :class:`~repro.query.foldin.FoldIn` length
+bucket, and runs the *one* compiled scorer for that bucket — so concurrent
+clients share compiles and amortize dispatch exactly like training batches
+do.  Per-document results are split back out and each request's future is
+resolved with its own :class:`QueryResponse`.
+
+Latency/throughput accounting is built in (:meth:`QueryServer.stats`):
+request/batch/document/token counts, mean batch occupancy, quantile
+latencies, and the compiled-bucket cache size — the numbers
+``benchmarks/bench_query.py`` sweeps.
+
+:class:`QueryClient` is the synchronous facade: ``client.score(tokens,
+lengths=...)`` blocks for one request; many client threads can share one
+server (that is the point).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from .foldin import FoldIn
+
+
+@dataclasses.dataclass
+class QueryResponse:
+    """One request's slice of a dispatched batch."""
+    doc_ll: np.ndarray               # (n_docs,) per-document score
+    per_token_ll: float              # request-level nats/token
+    perplexity: float
+    n_tokens: int
+    n_docs: int
+    mixtures: dict[str, np.ndarray]  # local RV -> this request's rows
+    batch_docs: int                  # documents in the dispatched batch
+    latency_s: float                 # enqueue -> resolve
+
+
+@dataclasses.dataclass
+class _Request:
+    values: np.ndarray
+    lengths: np.ndarray
+    future: Future
+    t_enqueue: float
+
+
+class QueryServer:
+    """Batched dispatch over a :class:`FoldIn` scorer.
+
+    ``max_batch_docs`` — documents per dispatched fold-in batch;
+    ``max_delay_s`` — how long the dispatcher holds the first request of a
+    batch waiting for co-riders (the latency/throughput knob);
+    ``max_queue`` — backpressure bound on undispatched requests;
+    ``stats_window`` — samples kept for the batch-occupancy/latency
+    quantiles (a sliding window, so a long-lived server's accounting
+    stays O(window); the counters are lifetime totals).
+    """
+
+    def __init__(self, foldin: FoldIn, max_batch_docs: int = 64,
+                 max_delay_s: float = 0.002, max_queue: int = 1024,
+                 stats_window: int = 4096):
+        if max_batch_docs <= 0:
+            raise ValueError("max_batch_docs must be positive")
+        self.foldin = foldin
+        self.max_batch_docs = max_batch_docs
+        self.max_delay_s = max_delay_s
+        self._q: "queue.Queue[_Request]" = queue.Queue(maxsize=max_queue)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+        self._n_requests = 0
+        self._n_batches = 0
+        self._n_docs = 0
+        self._n_tokens = 0
+        self._batch_sizes = collections.deque(maxlen=stats_window)
+        self._latencies = collections.deque(maxlen=stats_window)
+        self._t_start = time.time()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "QueryServer":
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain nothing further; in-flight batch finishes, queued requests
+        are failed with ``RuntimeError``."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        while True:
+            try:
+                req = self._q.get_nowait()
+            except queue.Empty:
+                break
+            req.future.set_exception(RuntimeError("query server stopped"))
+
+    def __enter__(self) -> "QueryServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client edge -------------------------------------------------------
+
+    def submit(self, values, segment_ids=None, lengths=None) -> Future:
+        """Enqueue one request (one or more documents); returns a
+        :class:`~concurrent.futures.Future` of :class:`QueryResponse`."""
+        values = np.asarray(values, np.int32).ravel()
+        if lengths is None:
+            if segment_ids is None:
+                lengths = np.array([len(values)], np.int64)
+            else:
+                seg = np.asarray(segment_ids, np.int64).ravel()
+                if seg.shape != values.shape:
+                    raise ValueError("segment_ids must align with values")
+                n_docs = int(seg.max()) + 1 if len(seg) else 0
+                lengths = np.bincount(seg, minlength=n_docs)
+                if (np.sort(seg) != seg).any():
+                    raise ValueError("segment_ids must be nondecreasing "
+                                     "per request (documents back to back)")
+        lengths = np.asarray(lengths, np.int64).ravel()
+        if int(lengths.sum()) != len(values):
+            raise ValueError(f"lengths sum to {int(lengths.sum())}, "
+                             f"got {len(values)} values")
+        fut: Future = Future()
+        self._q.put(_Request(values, lengths, fut, time.time()))
+        return fut
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            docs = len(first.lengths)
+            deadline = time.time() + self.max_delay_s
+            while docs < self.max_batch_docs:
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    break
+                try:
+                    req = self._q.get(timeout=remaining)
+                except queue.Empty:
+                    break
+                batch.append(req)
+                docs += len(req.lengths)
+            try:
+                self._dispatch(batch)
+            except Exception as e:                 # surface, don't die
+                for req in batch:
+                    if not req.future.done():
+                        req.future.set_exception(e)
+
+    def _dispatch(self, batch: list[_Request]) -> None:
+        values = np.concatenate([r.values for r in batch])
+        lengths = np.concatenate([r.lengths for r in batch])
+        res = self.foldin.score(values, lengths=lengths)
+        t_done = time.time()
+
+        off = 0
+        for req in batch:
+            nd = len(req.lengths)
+            doc_ll = res.doc_ll[off:off + nd]
+            n_tok = int(req.lengths.sum())
+            ptl = float(doc_ll.sum()) / n_tok if n_tok else float("nan")
+            mixtures = {}
+            for name, rows in res.mixtures.items():
+                grp = res.mixture_groups[name]
+                sel = (grp >= off) & (grp < off + nd)
+                mixtures[name] = rows[sel]
+            req.future.set_result(QueryResponse(
+                doc_ll=doc_ll.copy(), per_token_ll=ptl,
+                perplexity=float(np.exp(-ptl)) if n_tok else float("nan"),
+                n_tokens=n_tok, n_docs=nd, mixtures=mixtures,
+                batch_docs=res.n_docs,
+                latency_s=t_done - req.t_enqueue))
+            off += nd
+
+        with self._lock:
+            self._n_requests += len(batch)
+            self._n_batches += 1
+            self._n_docs += res.n_docs
+            self._n_tokens += res.n_tokens
+            self._batch_sizes.append(res.n_docs)
+            self._latencies.extend(t_done - r.t_enqueue for r in batch)
+
+    # -- accounting --------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving counters since construction: lifetime counts, docs/s,
+        the compiled-bucket cache size, and windowed mean batch occupancy
+        and p50/p95 latency (ms)."""
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64)
+            dt = max(time.time() - self._t_start, 1e-9)
+            return {
+                "requests": self._n_requests,
+                "batches": self._n_batches,
+                "docs": self._n_docs,
+                "tokens": self._n_tokens,
+                "mean_batch_docs": (float(np.mean(self._batch_sizes))
+                                    if self._batch_sizes else 0.0),
+                "latency_p50_ms": (float(np.percentile(lat, 50)) * 1e3
+                                   if len(lat) else float("nan")),
+                "latency_p95_ms": (float(np.percentile(lat, 95)) * 1e3
+                                   if len(lat) else float("nan")),
+                "docs_per_s": self._n_docs / dt,
+                "tokens_per_s": self._n_tokens / dt,
+                "compiled_buckets": self.foldin.compiled_buckets,
+            }
+
+
+class QueryClient:
+    """Synchronous facade over a running :class:`QueryServer`."""
+
+    def __init__(self, server: QueryServer, timeout_s: float = 120.0):
+        self.server = server
+        self.timeout_s = timeout_s
+
+    def score(self, values, segment_ids=None, lengths=None) -> QueryResponse:
+        """Score one request's documents; blocks until the batched
+        dispatch resolves it."""
+        fut = self.server.submit(values, segment_ids=segment_ids,
+                                 lengths=lengths)
+        return fut.result(timeout=self.timeout_s)
+
+    def topics(self, name: str, k: int = 10):
+        """Convenience pass-through: top-k columns of a posterior table
+        (answered from the artifact, no dispatch)."""
+        return self.server.foldin.posterior.top_k(name, k)

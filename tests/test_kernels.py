@@ -513,3 +513,95 @@ def test_ops_dispatch_forced_pallas(monkeypatch):
     r, l = ops.zstep(a)
     rr, ll = ref.zstep(a)
     np.testing.assert_allclose(r, rr, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hoisted (host-side) streamed-path token bucketing
+# ---------------------------------------------------------------------------
+
+def test_host_bucketing_matches_traced_bitwise():
+    """The numpy bucketing twin must reproduce the traced version
+    op-for-op, so a hoisted permutation is bitwise the in-trace one."""
+    from repro.kernels.fused_zstats import _bucket, _bucket_host
+    rng = np.random.default_rng(0)
+    for n, tl, n_tiles, bn in [(1000, 128, 7, 64), (5, 8, 3, 8),
+                               (4096, 256, 16, 512), (64, 512, 1, 64)]:
+        key = rng.integers(0, tl * n_tiles, n).astype(np.int32)
+        traced = _bucket(jnp.asarray(key), n, tl, n_tiles, bn)
+        host = _bucket_host(key, n, tl, n_tiles, bn)
+        for t, h in zip(traced, host):
+            np.testing.assert_array_equal(np.asarray(t), h)
+
+
+@pytest.mark.parametrize("name", sorted(STREAM_CASES))
+def test_host_bucketing_streamed_zstats_bitwise(name, monkeypatch):
+    """zstats with the hoisted bucketing equals zstats computing it in
+    trace, bitwise, on both streamed flavors."""
+    import repro.kernels.fused_zstats as fz
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    et, rows, children, zmask = _zcase(*STREAM_CASES[name])
+    bucketing = ops.host_bucketing(et, rows, children)
+    assert bucketing is not None, "streamed case must be hoistable"
+    assert all(isinstance(b, np.ndarray) for b in bucketing)
+    got = ops.zstats(et, rows, children, zmask, bucketing=bucketing)
+    want = ops.zstats(et, rows, children, zmask)
+    _assert_zstats_bitwise(got, want)
+    # a stale bucketing (wrong token count) is rejected, not misapplied
+    half = rows.shape[0] // 2
+    with pytest.raises(ValueError, match="stale bucketing"):
+        fz.zstats(et, rows[:half], tuple(
+            c._replace(values=c.values[:half],
+                       mask=None if c.mask is None else c.mask[:half])
+            for c in children),
+            None if zmask is None else zmask[:half],
+            interpret=True, bucketing=bucketing)
+
+
+def test_host_bucketing_none_for_resident_and_traced():
+    """Nothing to hoist: resident layouts and traced index streams both
+    answer None (always safe to pass through)."""
+    import jax
+    from repro.kernels import fused_zstats as fz
+    et, rows, children, zmask = _zcase(20, 300, 4, 20,
+                                       [(4, 33, 1, False, False, False)])
+    assert fz.host_bucketing(et, rows, children) is None   # resident
+
+    et_s, rows_s, children_s, _ = _zcase(*STREAM_CASES["prior"])
+
+    got = []
+
+    @jax.jit
+    def probe(r):
+        got.append(fz.host_bucketing(et_s, r, children_s))
+        return r
+
+    probe(rows_s)
+    assert got == [None]                                   # traced key
+
+
+def test_full_batch_step_hoists_bucketing(monkeypatch):
+    """The full-batch engine's step caches a host bucketing on the program
+    for a streamed-table latent (the ROADMAP follow-up): the device-side
+    argsort leaves the jitted step."""
+    from repro.core import models
+    from repro.core.runtime import make_step
+    from repro.core.vmp import init_state
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    rng = np.random.default_rng(0)
+    v = 40000                       # phi (K, V) padded f32 > _TABLE_BUDGET
+    m = models.make("lda", alpha=0.1, beta=0.05, K=4, V=v)
+    toks = rng.integers(0, v, 3000).astype(np.int32)
+    docs = np.sort(rng.integers(0, 20, 3000)).astype(np.int32)
+    m["x"].observe(toks, segment_ids=docs)
+    prog = m.compile()
+    step = make_step(prog, donate=False)
+    state, _ = step(init_state(prog, 0))
+    cache = prog.meta.get("_zstats_bucketing")
+    assert cache and cache.get(("z", 3000)) is not None
+    src, slot_tile, blk_tile = cache[("z", 3000)]
+    assert isinstance(src, np.ndarray)
+    # the cached permutation covers every token exactly once
+    assert np.array_equal(np.sort(src[src >= 0]), np.arange(3000))
+    for p in state.posteriors.values():
+        assert np.isfinite(np.asarray(p)).all()

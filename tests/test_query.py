@@ -1,0 +1,291 @@
+"""The query/serving layer: frozen posterior artifacts, compiled fold-in
+(bitwise parity with the engines' held-out ELBO), and the micro-batching
+query server."""
+
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import make_engine, models
+from repro.data.pipeline import holdout_split
+from repro.query import (FoldIn, FoldInConfig, Posterior, QueryClient,
+                         QueryServer)
+
+HOLDOUT_ITERS = 10       # the engines' holdout_local_iters default
+
+
+@pytest.fixture(scope="module")
+def fitted(request):
+    """One SVI fit with a holdout, shared across the module (fits are the
+    slow part; everything downstream treats the result as read-only)."""
+    from repro.data import SyntheticCorpus
+    corpus = SyntheticCorpus(n_docs=50, vocab=30, n_topics=3, mean_len=60,
+                             seed=0).generate()
+    m = models.make("lda", alpha=0.1, beta=0.05, K=3, V=30)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    result = make_engine("svi", steps=25, batch_size=16, holdout_frac=0.1,
+                         holdout_every=5, seed=0).fit(m)
+    return {"corpus": corpus, "model": m, "result": result,
+            "posterior": result.freeze(m)}
+
+
+def _holdout_docs(corpus, n_groups=50, frac=0.1, seed=0):
+    """The engine's held-out documents, relabeled 0..H-1 (the fold-in
+    caller's view)."""
+    _, hold = holdout_split(n_groups, frac, seed)
+    hm = np.isin(corpus["doc_ids"], hold)
+    return (corpus["tokens"][hm],
+            np.searchsorted(hold, corpus["doc_ids"][hm]), hold)
+
+
+# ---------------------------------------------------------------------------
+# Posterior artifact
+# ---------------------------------------------------------------------------
+
+def test_posterior_save_load_round_trip(fitted, tmp_path):
+    post = fitted["posterior"]
+    path = str(tmp_path / "artifact")
+    post.save(path)
+    loaded = Posterior.load(path)
+    assert loaded.model == post.model == "lda"
+    assert loaded.params == {"alpha": 0.1, "beta": 0.05, "K": 3, "V": 30}
+    assert loaded.local == ("theta",)
+    assert loaded.observed == ("x",)
+    for n in post.posteriors:
+        np.testing.assert_array_equal(loaded.posteriors[n],
+                                      post.posteriors[n])
+    assert loaded.meta["backend"] == "svi"
+
+
+def test_posterior_load_rejects_version_mismatch(fitted, tmp_path):
+    path = str(tmp_path / "artifact")
+    fitted["posterior"].save(path)
+    doc = json.load(open(os.path.join(path, "posterior.json")))
+    doc["format_version"] = 999
+    json.dump(doc, open(os.path.join(path, "posterior.json"), "w"))
+    with pytest.raises(ValueError, match="format version"):
+        Posterior.load(path)
+
+
+def test_posterior_load_missing_artifact(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        Posterior.load(str(tmp_path / "nope"))
+
+
+def test_posterior_statistical_queries(fitted):
+    post = fitted["posterior"]
+    mean = post.mean("phi")
+    np.testing.assert_allclose(mean.sum(-1), 1.0, rtol=1e-12)
+    idx, probs = post.top_k("phi", 5)
+    assert idx.shape == probs.shape == (3, 5)
+    assert (np.diff(probs, axis=-1) <= 0).all()          # sorted descending
+    np.testing.assert_allclose(probs[:, 0], mean.max(-1), rtol=1e-12)
+    lo, hi = post.credible_interval("phi", 0.9)
+    assert ((lo <= mean) & (mean <= hi)).all()
+    assert ((hi - lo) > 0).all()
+    lo50, hi50 = post.credible_interval("phi", 0.5)
+    assert ((hi50 - lo50) <= (hi - lo) + 1e-12).all()    # narrower interval
+    sim = post.similarity("phi")
+    np.testing.assert_allclose(np.diag(sim), 1.0, atol=1e-9)
+    np.testing.assert_allclose(sim, sim.T, atol=1e-12)
+    with pytest.raises(KeyError, match="available"):
+        post.mean("nope")
+    with pytest.raises(ValueError, match="similarity"):
+        post.similarity("phi", kind="nope")
+
+
+def test_freeze_unobserved_model_needs_program(fitted):
+    m = models.make("lda", alpha=0.1, beta=0.05, K=3, V=30)
+    with pytest.raises(ValueError, match="program="):
+        fitted["result"].freeze(m)
+
+
+# ---------------------------------------------------------------------------
+# fold-in
+# ---------------------------------------------------------------------------
+
+def test_foldin_bitwise_parity_with_heldout_elbo(fitted):
+    """The acceptance bar: Posterior.load + FoldIn.score on the engine's
+    held-out documents reproduces InferenceResult.heldout_elbo BITWISE at
+    matching bucket (exact) and iteration settings."""
+    vals, segs, _ = _holdout_docs(fitted["corpus"])
+    fold = FoldIn(fitted["posterior"],
+                  FoldInConfig(local_iters=HOLDOUT_ITERS, bucket=None))
+    res = fold.score(vals, segment_ids=segs)
+    assert res.per_token_ll == fitted["result"].heldout_elbo
+    assert res.n_tokens == len(vals)
+
+
+def test_foldin_round_trip_artifact_stays_bitwise(fitted, tmp_path):
+    """Same parity through a save/load cycle (f32 arrays survive the npz
+    round trip exactly)."""
+    path = str(tmp_path / "artifact")
+    fitted["posterior"].save(path)
+    vals, segs, _ = _holdout_docs(fitted["corpus"])
+    fold = FoldIn(Posterior.load(path),
+                  FoldInConfig(local_iters=HOLDOUT_ITERS, bucket=None))
+    assert fold.score(vals, segment_ids=segs).per_token_ll \
+        == fitted["result"].heldout_elbo
+
+
+def test_foldin_outputs_are_coherent(fitted):
+    vals, segs, hold = _holdout_docs(fitted["corpus"])
+    fold = FoldIn(fitted["posterior"], FoldInConfig(local_iters=5))
+    res = fold.score(vals, segment_ids=segs)
+    assert res.n_docs == len(hold)
+    assert res.doc_ll.shape == (len(hold),)
+    # the per-doc decomposition sums back to the total (float reassociation)
+    np.testing.assert_allclose(res.doc_ll.sum(), res.elbo, rtol=1e-5)
+    mix = res.mixtures["theta"]
+    assert mix.shape == (len(hold), 3)
+    np.testing.assert_allclose(mix.sum(-1), 1.0, rtol=1e-5)
+    assert res.perplexity == pytest.approx(np.exp(-res.per_token_ll))
+
+
+def test_foldin_determinism_across_batch_compositions(fitted):
+    """A document's score must not depend on which other documents share
+    its dispatch batch: same bucket -> bitwise; the repeated call is
+    bitwise by construction."""
+    corpus = fitted["corpus"]
+    offs = np.concatenate([[0], np.cumsum(corpus["lengths"])])
+    docs = [corpus["tokens"][offs[i]:offs[i + 1]] for i in range(6)]
+    fold = FoldIn(fitted["posterior"], FoldInConfig(local_iters=5))
+    solo = fold.score(docs[0])
+    batch = fold.score(np.concatenate(docs),
+                       lengths=corpus["lengths"][:6])
+    again = fold.score(np.concatenate(docs),
+                       lengths=corpus["lengths"][:6])
+    np.testing.assert_array_equal(batch.doc_ll, again.doc_ll)
+    # doc 0 alone vs doc 0 + 5 co-riders (different padded caps)
+    np.testing.assert_allclose(solo.doc_ll[0], batch.doc_ll[0], rtol=1e-6)
+    np.testing.assert_allclose(solo.mixtures["theta"][0],
+                               batch.mixtures["theta"][0], rtol=1e-6)
+
+
+def test_foldin_bucketing_caches_compiles(fitted):
+    corpus = fitted["corpus"]
+    offs = np.concatenate([[0], np.cumsum(corpus["lengths"])])
+    fold = FoldIn(fitted["posterior"],
+                  FoldInConfig(local_iters=2, min_cap=64))
+    for i in range(8):           # similar-length docs share one bucket
+        fold.score(corpus["tokens"][offs[i]:offs[i + 1]])
+    assert fold.compiled_buckets <= 2
+    with pytest.raises(ValueError, match="bucket"):
+        FoldInConfig(bucket="nope")
+
+
+def test_foldin_rejects_mismatched_vocab(fitted, tmp_path):
+    path = str(tmp_path / "artifact")
+    fitted["posterior"].save(path)
+    doc = json.load(open(os.path.join(path, "posterior.json")))
+    doc["params"]["V"] = 64          # artifact tables are still V=30
+    json.dump(doc, open(os.path.join(path, "posterior.json"), "w"))
+    with pytest.raises(ValueError, match="mismatch"):
+        FoldIn(Posterior.load(path)).score(np.array([1, 2, 3], np.int32))
+
+
+def test_foldin_slda_with_bindings(small_corpus):
+    """The nested-plate (zmap) family folds in too: SLDA with a
+    sentence->document binding."""
+    n = len(small_corpus["tokens"])
+    sent_of_tok = (np.arange(n) // 7).astype(np.int32)
+    doc_of_sent = small_corpus["doc_ids"][::7][:sent_of_tok.max() + 1]
+    m = models.make("slda", alpha=0.2, beta=0.2, K=3, V=30)
+    m["x"].observe(small_corpus["tokens"], segment_ids=sent_of_tok)
+    m.bind("sents", doc_of_sent)
+    result = make_engine("svi", steps=10, batch_size=16, seed=0).fit(m)
+    fold = FoldIn(result.freeze(m), FoldInConfig(local_iters=3))
+    res = fold.score(small_corpus["tokens"][:70],
+                     segment_ids=sent_of_tok[:70],
+                     bindings={"sents": doc_of_sent[:10]})
+    assert np.isfinite(res.per_token_ll)
+    assert np.isfinite(res.doc_ll).all()
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def test_gibbs_heldout_elbo_populated(fitted):
+    """Satellite: the sampling backend scores its held-out docs via the
+    fold-in path, so heldout_elbo is populated and on the same metric as
+    the variational engines (same split at equal seeds)."""
+    corpus = fitted["corpus"]
+    m = models.make("lda", alpha=0.1, beta=0.05, K=3, V=30)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    res = make_engine("gibbs", steps=20, holdout_frac=0.1, seed=0).fit(m)
+    assert res.heldout_trace
+    assert np.isfinite(res.heldout_elbo)
+    assert res.meta["n_holdout_groups"] == 5
+    # trained on the training slice only: theta has train-many rows
+    assert res.posteriors["theta"].shape == (45, 3)
+    # same metric, same split -> comparable scale to the SVI number
+    assert abs(res.heldout_elbo - fitted["result"].heldout_elbo) < 1.0
+
+
+def test_topics_keyerror_lists_available(fitted):
+    with pytest.raises(KeyError, match=r"available.*phi.*theta"):
+        fitted["result"].topics("psi")
+
+
+# ---------------------------------------------------------------------------
+# the query server
+# ---------------------------------------------------------------------------
+
+def test_server_batches_and_matches_direct_scoring(fitted):
+    corpus = fitted["corpus"]
+    offs = np.concatenate([[0], np.cumsum(corpus["lengths"])])
+    docs = [corpus["tokens"][offs[i]:offs[i + 1]] for i in range(12)]
+    fold = FoldIn(fitted["posterior"], FoldInConfig(local_iters=3))
+    direct = [fold.score(d) for d in docs]
+    with QueryServer(fold, max_batch_docs=8, max_delay_s=0.02) as srv:
+        client = QueryClient(srv)
+        results = [None] * len(docs)
+
+        def run(i):
+            results[i] = client.score(docs[i])
+
+        threads = [threading.Thread(target=run, args=(i,))
+                   for i in range(len(docs))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = srv.stats()
+    for r, d in zip(results, direct):
+        np.testing.assert_allclose(r.doc_ll[0], d.doc_ll[0], rtol=1e-6)
+        np.testing.assert_allclose(r.mixtures["theta"],
+                                   d.mixtures["theta"], rtol=1e-6)
+    assert stats["requests"] == len(docs)
+    assert stats["docs"] == len(docs)
+    assert stats["batches"] <= len(docs)       # micro-batching happened
+    assert stats["compiled_buckets"] >= 1
+    assert np.isfinite(stats["latency_p50_ms"])
+
+
+def test_server_multi_doc_requests_split_correctly(fitted):
+    corpus = fitted["corpus"]
+    offs = np.concatenate([[0], np.cumsum(corpus["lengths"])])
+    fold = FoldIn(fitted["posterior"], FoldInConfig(local_iters=3))
+    with QueryServer(fold, max_batch_docs=16, max_delay_s=0.01) as srv:
+        client = QueryClient(srv)
+        r = client.score(corpus["tokens"][:offs[3]],
+                         lengths=corpus["lengths"][:3])
+    assert r.n_docs == 3
+    assert r.doc_ll.shape == (3,)
+    assert r.mixtures["theta"].shape == (3, 3)
+    direct = fold.score(corpus["tokens"][:offs[3]],
+                        lengths=corpus["lengths"][:3])
+    np.testing.assert_array_equal(r.doc_ll, direct.doc_ll)
+
+
+def test_server_stop_fails_queued_requests(fitted):
+    fold = FoldIn(fitted["posterior"], FoldInConfig(local_iters=1))
+    srv = QueryServer(fold)          # never started
+    fut = srv.submit(np.array([1, 2, 3], np.int32))
+    srv.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        fut.result(timeout=5)
