@@ -1,0 +1,212 @@
+"""Always-on loop: append-while-training + hot artifact refresh under load.
+
+The streaming acceptance bar (ISSUE 6 / ROADMAP "online inference with hot
+model refresh"), in two acts:
+
+1. *Append-while-training* — a :class:`ShardedCorpusWriter` keeps
+   committing document chunks on a background thread while growing-mode
+   SVI trains on the same directory.  The growing sampler re-snapshots the
+   population each epoch (corpus ``refresh()``), so appended documents
+   enter the schedule live; the fit must reach the held-out per-token ELBO
+   target a *resident* fit of the complete corpus sets (within TOL), with
+   the corpus reaching its full size mid-run.  Reported: steps/time to
+   target, population trajectory, commits observed.
+2. *Hot refresh under load* — a :class:`QueryServer` with concurrent
+   client threads survives >= 3 artifact hot-swaps (built warm via
+   ``FoldIn.with_posterior``): zero dropped or unresolved requests, every
+   response names the artifact version that scored it.  Reported: swap
+   install latency (swap() call -> first response scored by the new
+   artifact), requests in flight at swap time, throughput, compiled
+   buckets (warm swaps add none).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core import SVI, SVIConfig, make_engine, models
+from repro.core.engine import InferenceResult
+from repro.data import ShardedCorpusWriter
+from repro.query import FoldIn, FoldInConfig, QueryClient, QueryServer
+
+TOL = 0.05            # nats/token slack on the resident target
+K, V = 8, 1000
+ALPHA, BETA, MEAN_LEN = 0.1, 0.05, 100
+INIT_DOCS = 600       # committed before training starts
+CHUNK_DOCS = 200      # appended live, per commit
+N_CHUNKS = 4          # -> final corpus 1400 docs
+CAPACITY = 2048       # pre-allocated local-row ceiling (no retrace)
+N_SWAPS = 3
+N_CLIENTS = 4
+
+
+def _corpus(seed: int = 0):
+    """The full planted-topic corpus (generated once; streamed in pieces)."""
+    rng = np.random.default_rng(seed)
+    phi = rng.dirichlet(np.full(V, BETA), size=K)
+    phi_cdf = np.cumsum(phi, axis=1)
+    n_docs = INIT_DOCS + N_CHUNKS * CHUNK_DOCS
+    theta = rng.dirichlet(np.full(K, ALPHA), size=n_docs)
+    lengths = np.maximum(rng.poisson(MEAN_LEN, size=n_docs), 2) \
+        .astype(np.int64)
+    n = int(lengths.sum())
+    z = np.empty(n, np.int32)
+    start = 0
+    for d, ln in enumerate(lengths):
+        z[start:start + ln] = rng.choice(K, size=ln, p=theta[d])
+        start += ln
+    u = rng.random(n)
+    tokens = np.empty(n, np.int32)
+    for k in range(K):
+        m = z == k
+        tokens[m] = np.searchsorted(phi_cdf[k], u[m]).astype(np.int32)
+    return np.minimum(tokens, V - 1), lengths
+
+
+def _model():
+    return models.make("lda", alpha=ALPHA, beta=BETA, K=K, V=V)
+
+
+def run(report):
+    tokens, lengths = _corpus()
+    offs = np.concatenate([[0], np.cumsum(lengths)])
+    tmp = tempfile.mkdtemp(prefix="bench_streaming_")
+    try:
+        # -- resident target: the same complete corpus, fit in one piece
+        m = _model()
+        m["x"].observe(tokens, lengths=lengths)
+        t0 = time.time()
+        res = make_engine("svi", steps=80, batch_size=128, local_iters=3,
+                          holdout_frac=0.02, holdout_every=10,
+                          seed=0).fit(m)
+        target = res.heldout_elbo
+        report("streaming_resident_target", (time.time() - t0) * 1e6 / 80,
+               f"target={target:.4f};docs={len(lengths)}")
+
+        # -- append-while-training
+        w = ShardedCorpusWriter(os.path.join(tmp, "corpus"),
+                                shard_tokens=1 << 15, vocab=V)
+        w.add_docs(tokens[:offs[INIT_DOCS]], lengths[:INIT_DOCS])
+        corpus = w.commit()
+        commits = {"n": 1}
+        done = threading.Event()
+
+        def appender():
+            for i in range(N_CHUNKS):
+                time.sleep(0.75)        # commits land mid-training
+                lo = INIT_DOCS + i * CHUNK_DOCS
+                hi = lo + CHUNK_DOCS
+                w.add_docs(tokens[offs[lo]:offs[hi]], lengths[lo:hi])
+                w.commit()
+                commits["n"] += 1
+            done.set()
+
+        cfg = SVIConfig(batch_size=128, local_iters=3, holdout_frac=0.02,
+                        holdout_every=10, pad_multiple=1024, seed=0,
+                        growing=True, capacity_docs=CAPACITY)
+        svi = SVI(_model(), cfg, corpus=corpus)
+        thread = threading.Thread(target=appender, daemon=True)
+        t0 = time.time()
+        thread.start()
+        state, reached, steps_done, h = None, None, 0, float("-inf")
+        while steps_done < 400 and (reached is None or not done.is_set()):
+            state, hist = svi.fit(steps=10, state=state)
+            steps_done += 10
+            h = hist["heldout"][-1][1]
+            if reached is None and done.is_set() and h >= target - TOL:
+                reached = steps_done
+        thread.join()
+        t_fit = time.time() - t0
+        svi.close()
+        log = svi.sampler._inner.epoch_log()
+        pops = [p for _, p in log]
+        report("streaming_fit_to_target", t_fit / max(steps_done, 1) * 1e6,
+               f"steps={reached};heldout={h:.4f};target={target:.4f};"
+               f"pop_start={pops[0]};pop_end={pops[-1]};"
+               f"commits={commits['n']};fit_s={t_fit:.1f}")
+        assert reached is not None, (
+            f"growing SVI missed target {target:.4f} (got {h:.4f})")
+        assert pops[-1] > pops[0], "corpus never grew during training"
+
+        # -- hot refresh under concurrent load
+        def freeze(st, note):
+            posts = {n: np.asarray(p) for n, p in st.posteriors.items()}
+            r = InferenceResult("svi", posts, [], [], {"note": note})
+            return r.freeze(_model(), program=svi.program, note=note)
+
+        early = SVI(_model(), cfg, corpus=corpus)   # an "older" artifact
+        mid_state, _ = early.fit(steps=5)
+        early.close()
+        artifacts = [freeze(mid_state, "early"), freeze(state, "final")]
+        fold = FoldIn(artifacts[0], FoldInConfig(local_iters=2))
+        srv = QueryServer(fold, max_batch_docs=16,
+                          max_delay_s=0.002).start()
+        client = QueryClient(srv, timeout_s=120)
+        docs = [tokens[offs[i]:offs[i + 1]] for i in range(32)]
+        results, errors = [], []
+        rlock = threading.Lock()
+        stop_flag = threading.Event()
+
+        def drive(i):
+            j = 0
+            while not stop_flag.is_set():
+                try:
+                    r = client.score(docs[(i + j) % len(docs)])
+                    with rlock:
+                        results.append(r)
+                except Exception as e:
+                    errors.append(e)
+                j += 1
+
+        threads = [threading.Thread(target=drive, args=(i,), daemon=True)
+                   for i in range(N_CLIENTS)]
+        for t in threads:
+            t.start()
+
+        def first_response_at(ver, deadline_s=60.0):
+            deadline = time.time() + deadline_s
+            while time.time() < deadline:
+                with rlock:
+                    if any(r.artifact_version == ver for r in results):
+                        return time.time()
+                time.sleep(0.001)
+            raise AssertionError(f"version {ver} never served")
+
+        first_response_at("v0")
+        cur = fold
+        swap_lat, inflight = [], []
+        for s in range(N_SWAPS):
+            cur = cur.with_posterior(artifacts[(s + 1) % 2])
+            inflight.append(srv.stats()["queue_depth"] + N_CLIENTS)
+            t_swap = time.time()
+            ver = srv.swap(cur)
+            swap_lat.append(first_response_at(ver) - t_swap)
+        time.sleep(0.2)                 # post-swap traffic on the last artifact
+        stop_flag.set()
+        for t in threads:
+            t.join()
+        srv.stop()
+        stats = srv.stats()
+        assert not errors, f"requests failed during swaps: {errors[:3]}"
+        versions = {r.artifact_version for r in results}
+        assert versions == {"v0", "v1", "v2", "v3"}, versions
+        assert stats["swaps"] == N_SWAPS
+        assert cur._fns is fold._fns    # swaps stayed warm (shared cache)
+        report("streaming_swap_install", float(np.mean(swap_lat)) * 1e6,
+               f"swaps={N_SWAPS};lat_ms=" +
+               "/".join(f"{x * 1e3:.1f}" for x in swap_lat) +
+               f";inflight={max(inflight)};dropped=0")
+        report("streaming_serving", 1e6 / max(stats["docs_per_s"], 1e-9),
+               f"requests={stats['requests']};docs_per_s="
+               f"{stats['docs_per_s']:.0f};"
+               f"p50_ms={stats['latency_p50_ms']:.2f};"
+               f"buckets={stats['compiled_buckets']};"
+               f"unresolved=0")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

@@ -15,6 +15,10 @@
     bench_query      query/serving layer: fold-in throughput sweep across
                      batch sizes, cold-vs-warm compile, batched-vs-single
                      speedup (the serving acceptance bar)
+    bench_streaming  always-on loop: append-while-training to the resident
+                     held-out target (growing sampler + live commits) and
+                     >= 3 hot artifact swaps under concurrent client load
+                     (swap install latency, zero dropped requests)
 
 Prints ``name,us_per_call,derived`` CSV.  Select modules with
 ``python -m benchmarks.run [vmp|scaling|partition|kernels] ...``.
@@ -33,12 +37,12 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_kernels, bench_outofcore, bench_partition,
-                            bench_query, bench_scaling, bench_svi,
-                            bench_vmp)
+                            bench_query, bench_scaling, bench_streaming,
+                            bench_svi, bench_vmp)
     mods = {"vmp": bench_vmp, "scaling": bench_scaling,
             "partition": bench_partition, "kernels": bench_kernels,
             "svi": bench_svi, "outofcore": bench_outofcore,
-            "query": bench_query}
+            "query": bench_query, "streaming": bench_streaming}
     args = sys.argv[1:]
     json_mode = "--json" in args
     picks = [a for a in args if a in mods] or list(mods)

@@ -57,6 +57,10 @@ class EngineConfig:
     holdout_every: int = 10
     holdout_local_iters: int = 10
     prefetch: bool = True           # out-of-core: double-buffered host I/O
+    growing: bool = False           # out-of-core: re-snapshot the doc
+                                    # population every epoch (streaming)
+    capacity_docs: int = 0          # growing: pre-allocated local-row ceiling
+    population_size: int = 0        # growing: population-VI assumed G
     # gibbs
     burnin: Optional[int] = None    # default: steps // 2
     thin: int = 1
@@ -176,6 +180,9 @@ def _svi_config(cfg: EngineConfig, full_batch: bool, n_groups: int):
         shuffle=not full_batch,
         rho=1.0 if full_batch else cfg.rho,
         prefetch=cfg.prefetch,
+        growing=cfg.growing and not full_batch,
+        capacity_docs=0 if full_batch else cfg.capacity_docs,
+        population_size=0 if full_batch else cfg.population_size,
         elog_dtype=cfg.elog_dtype,
         seed=cfg.seed)
 

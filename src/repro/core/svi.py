@@ -68,6 +68,17 @@ class SVIConfig:
                                    # batch_size=G == exact full-batch VMP)
     prefetch: bool = True          # sharded-corpus mode: overlap batch t+1's
                                    # shard I/O with step t (double-buffered)
+    growing: bool = False          # sharded-corpus mode: re-snapshot the doc
+                                   # population every epoch (streaming
+                                   # corpora; needs capacity_docs headroom)
+    capacity_docs: int = 0         # growing mode: pre-allocated local-row
+                                   # ceiling the corpus may grow into (the
+                                   # jitted step never retraces); 0 = let the
+                                   # caller's template decide
+    population_size: int = 0       # growing mode: fixed assumed population
+                                   # for the stochastic scale G/|B|
+                                   # (population-VI, for unbounded streams);
+                                   # 0 = use the epoch snapshot size
     seed: int = 0
 
     def __post_init__(self):
@@ -79,6 +90,11 @@ class SVIConfig:
                              f"diverges silently — got {self.rho}")
         if self.tau < 0:
             raise ValueError("tau must be >= 0")
+        if self.capacity_docs < 0 or self.population_size < 0:
+            raise ValueError("capacity_docs / population_size must be >= 0")
+        if (self.capacity_docs or self.population_size) and not self.growing:
+            raise ValueError("capacity_docs / population_size only apply to "
+                             "growing=True (streaming) mode")
 
 
 def robbins_monro(t: int, tau: float = 10.0, kappa: float = 0.7) -> float:
@@ -492,10 +508,29 @@ class SVI:
         self.corpus = corpus
         self._slicer = None
         self._caps_probe = None
+        if self.cfg.growing and corpus is None:
+            raise ValueError("growing=True needs corpus= (a ShardedCorpus "
+                             "being appended to by a live writer)")
         if corpus is not None:
             from repro.data import store as _store
             if not isinstance(program, VMPProgram):
-                program = _store.sharded_template(program, corpus)
+                cap = None
+                if self.cfg.growing:
+                    cap = self.cfg.capacity_docs
+                    if not cap:
+                        raise ValueError(
+                            "growing=True needs capacity_docs — the "
+                            "pre-allocated local-row ceiling the corpus "
+                            "may grow into (or pass a sharded_template "
+                            "built with capacity_docs=)")
+                program = _store.sharded_template(program, corpus,
+                                                  capacity_docs=cap)
+            if self.cfg.growing and (program.meta.get("capacity_docs", 0)
+                                     <= program.meta.get("pstar_size", 0)):
+                raise ValueError(
+                    "growing=True but the template has no growth headroom; "
+                    "build it with sharded_template(..., capacity_docs=N) "
+                    "for some N above the current document count")
             if not program.meta.get("sharded"):
                 raise ValueError(
                     "corpus= needs a sharded template program; build one "
@@ -522,7 +557,11 @@ class SVI:
             self.sampler = ShardedMinibatchSampler(
                 corpus=corpus, groups=self.train, batch_size=batch_size,
                 seed=self.cfg.seed, shuffle=self.cfg.shuffle,
-                loader=self._load_groups, prefetch=self.cfg.prefetch)
+                loader=self._load_groups, prefetch=self.cfg.prefetch,
+                grow=self.cfg.growing,
+                exclude=self.holdout if self.cfg.growing else None,
+                max_group=(program.meta["capacity_docs"]
+                           if self.cfg.growing else None))
         else:
             self.sampler = MinibatchSampler(
                 groups=self.train, batch_size=batch_size,
@@ -552,6 +591,10 @@ class SVI:
         """Host-batch loader for one group set (runs on the prefetch
         thread in sharded mode — numpy only).  Returns
         ``(batch, caps, n_tokens, n_groups)``."""
+        if self.cfg.growing:
+            # refresh() rebinds corpus.lengths wholesale; re-fetch so the
+            # LPT packing weights cover newly committed documents
+            self._weights = np.asarray(self.corpus.lengths, np.int64)
         hb, caps, n_tok = host_batch(self.program, groups, self._caps_fn,
                                      plan=self.plan,
                                      group_weights=self._weights,
@@ -574,8 +617,17 @@ class SVI:
                 elog_dtype=self.cfg.elog_dtype)
         rho = (self.cfg.rho if self.cfg.rho is not None
                else robbins_monro(t, self.cfg.tau, self.cfg.kappa))
-        # n_b is the true batch size (the epoch's tail batch may be short)
-        scale = len(self.train) / n_b
+        # n_b is the true batch size (the epoch's tail batch may be short).
+        # The stochastic scale G/|B|: G is the training population — fixed
+        # in batch mode, the epoch snapshot size under a growing corpus,
+        # or a pinned assumed population (population-VI) for unbounded
+        # streams.  Traced as a scalar either way: growth never retraces.
+        if self.cfg.growing:
+            n_pop = (self.cfg.population_size
+                     or self.sampler.population_at(t))
+        else:
+            n_pop = len(self.train)
+        scale = n_pop / n_b
         return self._steps[sig](state, batch, jnp.float32(rho),
                                 jnp.float32(scale))
 

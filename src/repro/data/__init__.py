@@ -1,4 +1,5 @@
-from .pipeline import (MinibatchSampler, SyntheticCorpus,  # noqa: F401
+from .pipeline import (GrowingMinibatchSampler,  # noqa: F401
+                       MinibatchSampler, SyntheticCorpus,
                        TokenStream, holdout_split)
 from .store import (ShardedCorpus, ShardedCorpusWriter,  # noqa: F401
                     ShardedMinibatchSampler, sharded_template,

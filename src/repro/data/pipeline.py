@@ -20,6 +20,8 @@ sampler determinism contract — see ``docs/data_pipeline.md``).
 from __future__ import annotations
 
 import dataclasses
+import threading
+from typing import Callable
 
 import numpy as np
 
@@ -117,6 +119,107 @@ class MinibatchSampler:
             perm = self.groups
         lo = idx * self.batch_size
         return np.sort(perm[lo:lo + self.batch_size])
+
+
+@dataclasses.dataclass
+class GrowingMinibatchSampler:
+    """Epoch-snapshot sampler over a *growing* group population.
+
+    Streaming corpora keep gaining documents while SVI runs, so a fixed
+    ``groups`` array goes stale.  This sampler instead calls
+    ``population()`` — any callable returning the current sorted group-id
+    array — once at the start of every epoch, and runs that epoch over the
+    returned *snapshot*: each epoch ``e`` covers
+    ``ceil(len(snapshot_e) / batch_size)`` consecutive schedule slots, its
+    batch order the same ``(seed, epoch)``-keyed permutation
+    :class:`MinibatchSampler` uses.  The determinism contract therefore
+    becomes ``(seed, epoch, snapshot)``: while the population does not
+    change, the schedule is **bitwise identical** to a fixed
+    :class:`MinibatchSampler` over the same groups, and a growing run is
+    reproducible whenever appends land at the same epoch boundaries
+    (``tests/test_streaming.py``).
+
+    ``batch_at`` is monotone-friendly, not monotone-only: epochs already
+    snapshotted replay from their record (seeking backward is exact), and
+    only a step past the recorded frontier triggers a new snapshot.
+    ``epoch_log()`` exposes the records for checkpointing / inspection.
+    Thread-safe: the record is extended under a lock (the sharded
+    prefetcher calls ``batch_at`` from its worker thread).
+    """
+    population: Callable[[], np.ndarray]
+    batch_size: int
+    seed: int = 0
+    shuffle: bool = True
+
+    def __post_init__(self):
+        if self.batch_size <= 0:
+            raise ValueError("batch_size must be positive")
+        self._lock = threading.Lock()
+        # per-epoch records: (start_step, snapshot groups); epochs abut
+        self._epochs: list[tuple[int, np.ndarray]] = []
+
+    def _bpe(self, groups: np.ndarray) -> int:
+        return -(-len(groups) // min(self.batch_size, len(groups)))
+
+    def _epoch_at(self, step: int) -> tuple[int, int, np.ndarray]:
+        """(epoch index, epoch start step, snapshot) covering ``step``,
+        snapshotting forward as needed."""
+        if step < 0:
+            raise ValueError(f"step must be >= 0, got {step}")
+        with self._lock:
+            while True:
+                if self._epochs:
+                    start, groups = self._epochs[-1]
+                    end = start + self._bpe(groups)
+                else:
+                    end = 0
+                if step < end:
+                    break
+                groups = np.asarray(self.population(), np.int64)
+                if len(groups) == 0:
+                    raise ValueError("population() returned no groups")
+                self._epochs.append((end, groups))
+            # binary search the record (starts are strictly increasing)
+            starts = [s for s, _ in self._epochs]
+            e = int(np.searchsorted(starts, step, "right")) - 1
+            start, groups = self._epochs[e]
+            return e, start, groups
+
+    def batch_at(self, step: int) -> np.ndarray:
+        """Sorted ``(<=batch_size,) int64`` group ids of schedule slot
+        ``step`` — :class:`MinibatchSampler`'s permutation over ``step``'s
+        epoch snapshot."""
+        e, start, groups = self._epoch_at(step)
+        bs = min(self.batch_size, len(groups))
+        if self.shuffle:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, e]))
+            perm = rng.permutation(groups)
+        else:
+            perm = groups
+        lo = (step - start) * bs
+        return np.sort(perm[lo:lo + bs])
+
+    def population_at(self, step: int) -> int:
+        """Size of the epoch snapshot covering ``step`` — the ``G`` of the
+        SVI stochastic scale ``G / |B|`` under the growing contract."""
+        return len(self._epoch_at(step)[2])
+
+    @property
+    def batches_per_epoch(self) -> int:
+        """Batches in the *latest* snapshotted epoch (epoch 0 is
+        snapshotted on first use)."""
+        with self._lock:
+            if self._epochs:
+                return self._bpe(self._epochs[-1][1])
+        self._epoch_at(0)
+        return self.batches_per_epoch
+
+    def epoch_log(self) -> list[tuple[int, int]]:
+        """``[(start_step, snapshot_size), ...]`` of every epoch
+        snapshotted so far."""
+        with self._lock:
+            return [(s, len(g)) for s, g in self._epochs]
 
 
 def holdout_split(n_groups: int, frac: float, seed: int = 0):

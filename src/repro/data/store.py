@@ -14,7 +14,11 @@ module keeps the corpus on disk instead:
   :class:`~repro.data.pipeline.SyntheticCorpus` result (or any
   ``tokens``/``doc_ids`` numpy pair) to shards; the writer appends document
   chunks, so a corpus larger than memory can be ingested without ever being
-  resident.
+  resident.  :meth:`ShardedCorpusWriter.commit` publishes a consistent
+  snapshot mid-stream (atomic manifest replace — temp + rename), so a
+  corpus can keep *arriving* while readers train on it; a live
+  :class:`ShardedCorpus` picks committed documents up with
+  :meth:`ShardedCorpus.refresh` without invalidating its open shard mmaps.
 - :func:`sharded_template` / :func:`slice_sharded` — compile a model into a
   full-size :class:`~repro.core.compiler.VMPProgram` *template* whose
   ``(N,)`` arrays are never materialized, and slice minibatches from the
@@ -66,6 +70,13 @@ class ShardedCorpusWriter:
     in which case it gets a dedicated oversized shard).  Chunks can be far
     smaller than the corpus: ingestion is streaming and never holds more
     than one unflushed shard resident.
+
+    **Streaming corpora**: :meth:`commit` publishes everything added so far
+    as a consistent, openable snapshot *without* closing the writer, so
+    readers (a training run, :meth:`ShardedCorpus.refresh`) can consume the
+    corpus while it is still growing.  Shard files are immutable once
+    written and documents are append-only, so every snapshot is a prefix of
+    every later one.
     """
 
     def __init__(self, path: str, shard_tokens: int = 1 << 22,
@@ -84,6 +95,7 @@ class ShardedCorpusWriter:
         self._n_docs = 0
         self._n_tokens = 0
         self._token_max = -1
+        self._commits = 0
         self._closed = False
         os.makedirs(self.path, exist_ok=True)
 
@@ -164,9 +176,20 @@ class ShardedCorpusWriter:
         })
         self._done_lengths.append(lengths)
 
-    def close(self) -> "ShardedCorpus":
-        """Flush the tail shard, write ``manifest.json`` + ``lengths.npy``,
-        and return the opened :class:`ShardedCorpus`."""
+    def commit(self) -> "ShardedCorpus":
+        """Publish every whole document added so far as a consistent,
+        openable snapshot; the writer stays open for further appends.
+
+        The buffered tail documents are flushed to a (possibly small) shard
+        first — commit at chunk granularity, not per document — then
+        ``lengths.npy`` is replaced atomically (temp + ``os.replace``) and
+        ``manifest.json`` *last*, also atomically.  A reader therefore
+        always observes a manifest whose shards and lengths are fully on
+        disk, and because documents are append-only, a lengths file that is
+        *newer* than the manifest a reader holds is a strict superset — its
+        ``[:n_docs]`` prefix is exactly the manifest-consistent view
+        (:meth:`ShardedCorpus.refresh` relies on this).  Returns the opened
+        snapshot."""
         if self._closed:
             raise RuntimeError("writer is closed")
         if self._n_docs == 0:
@@ -174,22 +197,36 @@ class ShardedCorpusWriter:
         if self._pending:
             self._flush(np.asarray(self._pending, np.int64))
             self._pending = []
-        lengths = np.concatenate(self._done_lengths)
-        np.save(os.path.join(self.path, _LENGTHS), lengths)
         vocab = self._token_max + 1
         if self._vocab is not None:
             if self._vocab < vocab:
                 raise ValueError(f"vocab={self._vocab} but corpus has token "
                                  f"id {self._token_max}")
             vocab = int(self._vocab)
+        self._commits += 1
+        lengths = np.concatenate(self._done_lengths)
+        ltmp = os.path.join(self.path, _LENGTHS + ".tmp")
+        with open(ltmp, "wb") as fh:
+            np.save(fh, lengths)
+        os.replace(ltmp, os.path.join(self.path, _LENGTHS))
         manifest = {"format": _FORMAT, "version": _VERSION,
+                    "commit": self._commits,
                     "n_docs": self._n_docs, "n_tokens": self._n_tokens,
                     "vocab": vocab, "dtype": "int32",
                     "shards": self._shards}
-        with open(os.path.join(self.path, _MANIFEST), "w") as fh:
+        mtmp = os.path.join(self.path, _MANIFEST + ".tmp")
+        with open(mtmp, "w") as fh:
             json.dump(manifest, fh, indent=1)
-        self._closed = True
+        os.replace(mtmp, os.path.join(self.path, _MANIFEST))
         return ShardedCorpus.open(self.path)
+
+    def close(self) -> "ShardedCorpus":
+        """Final :meth:`commit` (flush the tail shard, write
+        ``manifest.json`` + ``lengths.npy``); the writer accepts no further
+        documents.  Returns the opened :class:`ShardedCorpus`."""
+        corpus = self.commit()
+        self._closed = True
+        return corpus
 
 
 def write_sharded_corpus(corpus, path: str, shard_tokens: int = 1 << 22,
@@ -232,25 +269,80 @@ class ShardedCorpus:
     buffers one minibatch at a time (:meth:`gather_tokens`).  ``bytes_read``
     / ``reads`` count the explicit buffer traffic — the accounting the
     out-of-core benchmark reports.
+
+    A corpus still being written (:meth:`ShardedCorpusWriter.commit`) grows
+    under a live reader: :meth:`refresh` swaps in the latest committed
+    manifest without reopening — existing shard mmaps stay valid (shards
+    are immutable; commits only append), and already-handed-out doc ids
+    keep meaning the same documents.
     """
 
     def __init__(self, path: str, manifest: dict, lengths: np.ndarray):
         self.path = str(path)
-        self.manifest = manifest
-        self.lengths = np.asarray(lengths, np.int64)
-        # offsets[d] is doc d's first token position; (n_docs + 1,) int64
-        self.offsets = np.concatenate([[0], np.cumsum(self.lengths)])
-        self._shard_tok_start = np.asarray(
-            [s["token_start"] for s in manifest["shards"]], np.int64)
-        self._shard_tok_end = np.asarray(
-            [s["token_end"] for s in manifest["shards"]], np.int64)
         self._mmaps: dict[int, np.ndarray] = {}
         self._lock = threading.Lock()   # gather_tokens runs on the prefetch
         self.bytes_read = 0             # thread concurrently with held-out
         self.reads = 0                  # slicing on the consumer thread
-        if int(self.offsets[-1]) != self.n_tokens:
-            raise ValueError(f"{path}: lengths sum {int(self.offsets[-1])} "
-                             f"!= manifest n_tokens {self.n_tokens}")
+        self._install(manifest, lengths)
+
+    def _install(self, manifest: dict, lengths: np.ndarray) -> None:
+        """Validate and adopt one committed (manifest, lengths) snapshot.
+        All derived arrays are built first and published together under the
+        lock, so a concurrent :meth:`gather_tokens` sees either the old or
+        the new snapshot, never a mix."""
+        lengths = np.asarray(lengths, np.int64)
+        if len(lengths) < int(manifest["n_docs"]):
+            raise ValueError(
+                f"{self.path}: lengths file has {len(lengths)} docs but the "
+                f"manifest claims {manifest['n_docs']} (torn commit?)")
+        # a newer lengths file is a strict superset (docs are append-only):
+        # its prefix is exactly the manifest-consistent view
+        lengths = lengths[:int(manifest["n_docs"])]
+        # offsets[d] is doc d's first token position; (n_docs + 1,) int64
+        offsets = np.concatenate([[0], np.cumsum(lengths)])
+        if int(offsets[-1]) != int(manifest["n_tokens"]):
+            raise ValueError(
+                f"{self.path}: lengths sum {int(offsets[-1])} "
+                f"!= manifest n_tokens {manifest['n_tokens']}")
+        tok_start = np.asarray(
+            [s["token_start"] for s in manifest["shards"]], np.int64)
+        tok_end = np.asarray(
+            [s["token_end"] for s in manifest["shards"]], np.int64)
+        with self._lock:
+            self.manifest = manifest
+            self.lengths = lengths
+            self.offsets = offsets
+            self._shard_tok_start = tok_start
+            self._shard_tok_end = tok_end
+
+    def refresh(self) -> bool:
+        """Pick up documents committed since this reader's snapshot.
+
+        Re-reads ``manifest.json`` (atomically replaced by the writer, so
+        it is always complete) and, if the corpus grew, adopts the new
+        manifest + lengths: ``n_docs``/``n_tokens``/``offsets`` advance,
+        new shards become readable, and **live mmaps stay valid** (shards
+        are immutable; a commit only appends new ones).  Doc ids are
+        stable across refreshes.  Returns ``True`` iff the corpus grew;
+        shrinkage (a different corpus written over this path) raises.
+        """
+        mf = os.path.join(self.path, _MANIFEST)
+        with open(mf) as fh:
+            manifest = json.load(fh)
+        if manifest.get("format") != _FORMAT:
+            raise ValueError(f"{mf}: not a {_FORMAT} manifest")
+        if (manifest["n_docs"] == self.n_docs
+                and manifest["n_tokens"] == self.n_tokens):
+            return False
+        if (manifest["n_docs"] < self.n_docs
+                or manifest["n_tokens"] < self.n_tokens):
+            raise ValueError(
+                f"{self.path}: corpus shrank ({manifest['n_docs']} docs < "
+                f"{self.n_docs}); sharded corpora are append-only — was the "
+                f"directory rewritten?")
+        lengths = np.load(os.path.join(self.path, _LENGTHS))
+        self._install(manifest, lengths)
+        return True
 
     @classmethod
     def open(cls, path: str) -> "ShardedCorpus":
@@ -302,14 +394,17 @@ class ShardedCorpus:
             return mm
 
     # -- reads ------------------------------------------------------------
-    def _read_token_range(self, lo: int, hi: int) -> list[np.ndarray]:
+    def _read_token_range(self, lo: int, hi: int, tok_start: np.ndarray,
+                          tok_end: np.ndarray) -> list[np.ndarray]:
         """Copy tokens [lo, hi) out of the (possibly several) shards that
-        hold them; returns the pieces in order."""
+        hold them; returns the pieces in order.  ``tok_start``/``tok_end``
+        are the caller's snapshot of the shard token bounds (so a
+        concurrent refresh cannot tear one gather)."""
         out = []
-        sid = int(np.searchsorted(self._shard_tok_start, lo, "right")) - 1
+        sid = int(np.searchsorted(tok_start, lo, "right")) - 1
         while lo < hi:
-            s_lo = int(self._shard_tok_start[sid])
-            s_hi = int(self._shard_tok_end[sid])
+            s_lo = int(tok_start[sid])
+            s_hi = int(tok_end[sid])
             take = min(hi, s_hi)
             piece = np.asarray(self._mmap(sid)[lo - s_lo:take - s_lo])
             with self._lock:
@@ -328,10 +423,15 @@ class ShardedCorpus:
         docs = np.asarray(docs, np.int64)
         if len(docs) == 0:
             return np.zeros(0, np.int32)
-        if int(docs.min()) < 0 or int(docs.max()) >= self.n_docs:
-            raise IndexError(f"doc ids out of range [0, {self.n_docs})")
-        starts = self.offsets[docs]
-        ends = self.offsets[docs + 1]
+        with self._lock:                # one consistent snapshot per gather
+            offsets = self.offsets
+            tok_start = self._shard_tok_start
+            tok_end = self._shard_tok_end
+            n_docs = int(self.manifest["n_docs"])
+        if int(docs.min()) < 0 or int(docs.max()) >= n_docs:
+            raise IndexError(f"doc ids out of range [0, {n_docs})")
+        starts = offsets[docs]
+        ends = offsets[docs + 1]
         pieces: list[np.ndarray] = []
         i = 0
         while i < len(docs):
@@ -339,7 +439,8 @@ class ShardedCorpus:
             while j + 1 < len(docs) and docs[j + 1] == docs[j] + 1:
                 j += 1
             pieces.extend(self._read_token_range(int(starts[i]),
-                                                 int(ends[j])))
+                                                 int(ends[j]),
+                                                 tok_start, tok_end))
             i = j + 1
         return np.concatenate(pieces) if pieces else np.zeros(0, np.int32)
 
@@ -382,7 +483,8 @@ def _token_plate_spec(program):
 
 
 def sharded_template(model, corpus: ShardedCorpus,
-                     observe: str = "x", proto_docs: int = 2):
+                     observe: str = "x", proto_docs: int = 2,
+                     capacity_docs: Optional[int] = None):
     """Compile ``model`` into a full-size program template for ``corpus``
     without materializing any ``(N,)`` array.
 
@@ -395,6 +497,14 @@ def sharded_template(model, corpus: ShardedCorpus,
     :func:`slice_sharded` rebuilds each minibatch's slice from the shards
     instead, and any resident-path access fails loudly.  The caller's
     ``model`` is left untouched (it really does stay unobserved).
+
+    ``capacity_docs`` — padded-growth headroom for *streaming* corpora:
+    local Dirichlets get ``capacity_docs`` rows (documents committed later
+    slot into the pre-allocated tail rows), so the jitted SVI step never
+    retraces as the corpus grows.  ``meta["pstar_size"]`` stays the doc
+    count at template-build time (the holdout split is taken over it);
+    ``meta["capacity_docs"]`` records the ceiling and the growing sampler
+    refuses to sample past it.
     """
     import copy
     import dataclasses as dc
@@ -431,13 +541,17 @@ def sharded_template(model, corpus: ShardedCorpus,
                          f"partition group for sharded slicing")
 
     n_docs, n_tokens = corpus.n_docs, corpus.n_tokens
+    cap_docs = n_docs if capacity_docs is None else int(capacity_docs)
+    if cap_docs < n_docs:
+        raise ValueError(f"capacity_docs={cap_docs} is below the corpus's "
+                         f"current {n_docs} documents")
     dirichlets = {}
     for name, d in proto.dirichlets.items():
         if d.group_rows is None:
             dirichlets[name] = d
         else:
             dirichlets[name] = dc.replace(
-                d, g=n_docs, group_rows=np.arange(n_docs, dtype=np.int32))
+                d, g=cap_docs, group_rows=np.arange(cap_docs, dtype=np.int32))
     children = [dc.replace(f, values=None, n_z=n_tokens)]
     latents = [dc.replace(spec, n=n_tokens, prior_rows=None,
                           children=children, group=None)]
@@ -445,7 +559,7 @@ def sharded_template(model, corpus: ShardedCorpus,
     plate_sizes = dict(proto.plate_sizes)
     token_plate = model.net.rvs[observe].plate
     plate_sizes[token_plate.name] = n_tokens
-    plate_sizes[proto.meta["pstar"]] = n_docs
+    plate_sizes[proto.meta["pstar"]] = cap_docs
     layout, off = {}, 0
     for rv in proto.net.rvs.values():
         cnt = plate_sizes.get(rv.plate.name, 1)
@@ -453,7 +567,8 @@ def sharded_template(model, corpus: ShardedCorpus,
         off += cnt
     meta = dict(proto.meta)
     meta.update(n_observed=n_tokens, n_vertices=off, pstar_size=n_docs,
-                sharded=True, corpus_path=str(corpus.path))
+                capacity_docs=cap_docs, sharded=True,
+                corpus_path=str(corpus.path))
     return dc.replace(proto, dirichlets=dirichlets, latents=latents,
                       vertex_layout=layout, plate_sizes=plate_sizes,
                       meta=meta)
@@ -605,6 +720,20 @@ class ShardedMinibatchSampler:
     shard I/O overlaps the consumer's device step.  ``peak_buffer_bytes``
     tracks the largest concurrent footprint of the (at most two) live host
     batches — the resident working set the out-of-core benchmark reports.
+
+    **Streaming mode** (``grow=True``): the schedule is delegated to a
+    :class:`~repro.data.pipeline.GrowingMinibatchSampler` whose per-epoch
+    population snapshot calls :meth:`ShardedCorpus.refresh` and returns
+    every committed document except ``exclude`` (the holdout) — so
+    documents appended by a live :class:`ShardedCorpusWriter` enter the
+    schedule at the next epoch boundary.  ``max_group`` (the template's
+    ``capacity_docs``) bounds growth: sampling past it would write local
+    posterior rows that do not exist, so the snapshot raises instead of
+    silently dropping documents.  With prefetch on, the epoch boundary is
+    crossed one batch early (batch ``t+1`` builds while ``t`` runs), so
+    the snapshot that opens epoch ``e`` is taken while the last batch of
+    epoch ``e-1`` is still on device — benign, but it means appends land
+    in the schedule at *prefetch* granularity, not step granularity.
     """
     corpus: ShardedCorpus
     groups: np.ndarray
@@ -613,20 +742,58 @@ class ShardedMinibatchSampler:
     shuffle: bool = True
     loader: Optional[Callable[[np.ndarray], object]] = None
     prefetch: bool = True
+    grow: bool = False
+    exclude: Optional[np.ndarray] = None    # doc ids never sampled (holdout)
+    max_group: Optional[int] = None         # capacity_docs growth ceiling
 
     def __post_init__(self):
-        self._inner = MinibatchSampler(groups=self.groups,
-                                       batch_size=self.batch_size,
-                                       seed=self.seed, shuffle=self.shuffle)
-        self.groups = self._inner.groups
+        if self.grow:
+            from .pipeline import GrowingMinibatchSampler
+            if self.exclude is not None:
+                self.exclude = np.asarray(self.exclude, np.int64)
+            self._inner = GrowingMinibatchSampler(
+                population=self._snapshot_population,
+                batch_size=self.batch_size,
+                seed=self.seed, shuffle=self.shuffle)
+            self.groups = self._snapshot_population()
+        else:
+            self._inner = MinibatchSampler(groups=self.groups,
+                                           batch_size=self.batch_size,
+                                           seed=self.seed,
+                                           shuffle=self.shuffle)
+            self.groups = self._inner.groups
         self._prefetcher = (_Prefetcher(self._load_at)
                             if self.prefetch and self.loader else None)
         self._live = [0, 0]                     # [consumer, prefetch] bytes
         self.peak_buffer_bytes = 0
 
+    def _snapshot_population(self) -> np.ndarray:
+        """Refresh the corpus and return the current sampleable doc ids
+        (every committed doc minus ``exclude``) — the grow-mode epoch
+        snapshot."""
+        self.corpus.refresh()
+        n = self.corpus.n_docs
+        if self.max_group is not None and n > self.max_group:
+            raise RuntimeError(
+                f"corpus grew to {n} documents, past the template's "
+                f"capacity_docs={self.max_group}; rebuild the template "
+                f"(sharded_template(..., capacity_docs=...)) with more "
+                f"headroom and restart from the checkpoint")
+        pop = np.arange(n, dtype=np.int64)
+        if self.exclude is not None and len(self.exclude):
+            pop = np.setdiff1d(pop, self.exclude, assume_unique=True)
+        return pop
+
     @property
     def batches_per_epoch(self) -> int:
         return self._inner.batches_per_epoch
+
+    def population_at(self, step: int) -> int:
+        """Size of the group population at schedule slot ``step`` — the
+        epoch snapshot size in grow mode, ``len(groups)`` otherwise."""
+        if self.grow:
+            return self._inner.population_at(step)
+        return len(self.groups)
 
     def batch_at(self, step: int) -> np.ndarray:
         """Sorted ``(<=batch_size,) int64`` doc ids of schedule slot

@@ -18,9 +18,12 @@ from repro.compat import make_mesh
 from repro.configs import RunConfig
 
 
-def factor_mesh(n_devices: int, want_model: int = 0):
-    """Choose a (data, model) factorization for an arbitrary device count.
-    Greedy: model axis gets the largest power-of-2 divisor <= want_model."""
+def factor_counts(n_devices: int, want_model: int = 0) -> tuple[int, int]:
+    """The ``(data, model)`` axis sizes :func:`factor_mesh` realizes.
+    Greedy: model axis gets the largest power-of-2 divisor of ``n_devices``
+    that is ``<= want_model`` — which may be *smaller* than ``want_model``
+    (n=6, want_model=4 -> model=2, data=3), so validation must run against
+    this, not against the request."""
     model = 1
     if want_model > 1:
         m = min(want_model, n_devices)
@@ -29,20 +32,34 @@ def factor_mesh(n_devices: int, want_model: int = 0):
                 model = m
                 break
             m //= 2
-    data = n_devices // model
+    return n_devices // model, model
+
+
+def factor_mesh(n_devices: int, want_model: int = 0):
+    """Choose a (data, model) factorization for an arbitrary device count
+    (:func:`factor_counts`) and build the mesh."""
+    data, model = factor_counts(n_devices, want_model)
     return make_mesh((data, model), ("data", "model"))
 
 
 def remesh_and_resume(cfg, run: RunConfig, checkpoint_dir: str,
                       n_devices: int | None = None, want_model: int = 0,
                       steps: int = 10):
-    """Rebuild on a new mesh and continue training from the checkpoint."""
+    """Rebuild on a new mesh and continue training from the checkpoint.
+
+    Batch divisibility is validated against the factorization
+    :func:`factor_mesh` will actually pick — not the requested
+    ``want_model``, which it may round down — so an invalid config fails
+    here with the real numbers instead of deep inside ``train``."""
     from .train import train
     devs = jax.devices()
     n = n_devices or len(devs)
-    if run.global_batch % n and run.global_batch % (n // max(want_model, 1)):
-        raise ValueError(f"global batch {run.global_batch} not divisible "
-                         f"for {n} devices")
+    data, model = factor_counts(n, want_model)
+    if run.global_batch % data:
+        raise ValueError(
+            f"global batch {run.global_batch} not divisible by the data-"
+            f"parallel degree {data} ({n} devices factor as data={data} x "
+            f"model={model} for want_model={want_model})")
     mesh = factor_mesh(n, want_model)
     return train(cfg, run, steps, mesh=mesh, checkpoint_dir=checkpoint_dir,
                  checkpoint_every=max(steps // 2, 1))

@@ -109,6 +109,33 @@ class FoldIn:
                          for n, v in posterior.globals().items()}
         self._fns: dict = {}         # caps signature -> compiled scorer
 
+    def with_posterior(self, posterior: Posterior) -> "FoldIn":
+        """A :class:`FoldIn` serving ``posterior`` that reuses this one's
+        warm state — the hot-refresh path for :meth:`QueryServer.swap`.
+
+        The compiled scorers are shape-specialized, not value-specialized
+        (the posterior tables are runtime arguments), so when the new
+        artifact comes from the same model family — same model name and
+        parameters, same global table shapes, i.e. a later checkpoint of
+        the same training run — the blank prototype *and* the compiled
+        bucket cache are shared: the swap compiles nothing and the first
+        post-swap request runs warm.  A posterior of a different shape
+        gets a fresh (cold) :class:`FoldIn` instead."""
+        import jax.numpy as jnp
+        new_globals = {n: jnp.asarray(v, jnp.float32)
+                       for n, v in posterior.globals().items()}
+        same = (posterior.model == self.posterior.model
+                and posterior.params == self.posterior.params
+                and set(new_globals) == set(self._globals)
+                and all(new_globals[n].shape == self._globals[n].shape
+                        for n in self._globals))
+        if not same:
+            return FoldIn(posterior, self.cfg)
+        new = copy.copy(self)        # shares _proto (deep-copied per score)
+        new.posterior = posterior    # and _fns (new compiles benefit both)
+        new._globals = new_globals
+        return new
+
     # -- bucketing ---------------------------------------------------------
 
     def _caps_fn(self, name: str, n: int) -> int:

@@ -18,6 +18,16 @@ latencies, and the compiled-bucket cache size — the numbers
 :class:`QueryClient` is the synchronous facade: ``client.score(tokens,
 lengths=...)`` blocks for one request; many client threads can share one
 server (that is the point).
+
+**Hot refresh** (:meth:`QueryServer.swap`): a long-lived server follows a
+training run that keeps producing newer posteriors.  ``swap(foldin)``
+replaces the served artifact atomically under load — the dispatcher
+captures the ``(scorer, version)`` pair once per batch, immediately before
+dispatch, so an in-flight batch finishes on the scorer it started with and
+every later batch lands on the new one; no request is ever dropped or
+scored against a half-installed artifact.  Every :class:`QueryResponse`
+names the ``artifact_version`` that scored it, so clients can tell which
+model generation produced a number.  See ``docs/query_serving.md``.
 """
 
 from __future__ import annotations
@@ -45,6 +55,7 @@ class QueryResponse:
     mixtures: dict[str, np.ndarray]  # local RV -> this request's rows
     batch_docs: int                  # documents in the dispatched batch
     latency_s: float                 # enqueue -> resolve
+    artifact_version: str = "v0"     # which served artifact scored this
 
 
 @dataclasses.dataclass
@@ -65,18 +76,23 @@ class QueryServer:
     ``stats_window`` — samples kept for the batch-occupancy/latency
     quantiles (a sliding window, so a long-lived server's accounting
     stays O(window); the counters are lifetime totals).
+    ``version`` — label of the initial artifact (responses carry the label
+    of the artifact that scored them; :meth:`swap` installs new ones).
     """
 
     def __init__(self, foldin: FoldIn, max_batch_docs: int = 64,
                  max_delay_s: float = 0.002, max_queue: int = 1024,
-                 stats_window: int = 4096):
+                 stats_window: int = 4096, version: str = "v0"):
         if max_batch_docs <= 0:
             raise ValueError("max_batch_docs must be positive")
-        self.foldin = foldin
+        self._foldin = foldin
+        self._version = str(version)
+        self._swaps = 0
         self.max_batch_docs = max_batch_docs
         self.max_delay_s = max_delay_s
         self._q: "queue.Queue[_Request]" = queue.Queue(maxsize=max_queue)
         self._stop = threading.Event()
+        self._stopped = False           # guarded by _lock, final
         self._thread: threading.Thread | None = None
         self._lock = threading.Lock()
         self._n_requests = 0
@@ -89,7 +105,24 @@ class QueryServer:
 
     # -- lifecycle ---------------------------------------------------------
 
+    @property
+    def foldin(self) -> FoldIn:
+        """The currently served :class:`FoldIn` (changes on :meth:`swap`)."""
+        with self._lock:
+            return self._foldin
+
+    @property
+    def artifact_version(self) -> str:
+        """Label of the currently served artifact."""
+        with self._lock:
+            return self._version
+
     def start(self) -> "QueryServer":
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError(
+                    "query server stopped; build a new QueryServer (stop() "
+                    "is final so no submitted request can be stranded)")
         if self._thread is None or not self._thread.is_alive():
             self._stop.clear()
             self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -97,8 +130,18 @@ class QueryServer:
         return self
 
     def stop(self) -> None:
-        """Drain nothing further; in-flight batch finishes, queued requests
-        are failed with ``RuntimeError``."""
+        """Stop serving, permanently: the in-flight batch finishes, queued
+        requests are failed with ``RuntimeError``, and later :meth:`submit`
+        calls raise instead of enqueueing.
+
+        The shutdown order makes the single drain below complete:
+        ``_stopped`` is set under the same lock :meth:`submit` enqueues
+        under, so once it is set nothing can enter the queue; the
+        dispatcher is then joined (it may still consume and resolve
+        requests — those count as served); whatever remains is failed.  No
+        future can be left unresolved."""
+        with self._lock:
+            self._stopped = True
         self._stop.set()
         if self._thread is not None:
             self._thread.join()
@@ -110,6 +153,27 @@ class QueryServer:
                 break
             req.future.set_exception(RuntimeError("query server stopped"))
 
+    def swap(self, foldin: FoldIn, version: str | None = None) -> str:
+        """Atomically replace the served artifact; returns its version.
+
+        Safe under concurrent load: the dispatcher reads the
+        ``(foldin, version)`` pair once per batch, right before dispatch —
+        the batch in flight finishes on the artifact it started with,
+        every batch formed after the swap scores on ``foldin``, and each
+        response's ``artifact_version`` says which one it was.  No queue
+        flush, no dropped futures.  Build ``foldin`` via
+        :meth:`FoldIn.with_posterior` to reuse the warm compiled-bucket
+        cache (a swap then compiles nothing).  ``version`` defaults to
+        ``"v<swap count>"``."""
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError("query server stopped")
+            self._swaps += 1
+            self._foldin = foldin
+            self._version = (str(version) if version is not None
+                             else f"v{self._swaps}")
+            return self._version
+
     def __enter__(self) -> "QueryServer":
         return self.start()
 
@@ -120,7 +184,9 @@ class QueryServer:
 
     def submit(self, values, segment_ids=None, lengths=None) -> Future:
         """Enqueue one request (one or more documents); returns a
-        :class:`~concurrent.futures.Future` of :class:`QueryResponse`."""
+        :class:`~concurrent.futures.Future` of :class:`QueryResponse`.
+        Raises ``RuntimeError`` once the server is stopped (fail fast —
+        a request accepted after :meth:`stop` could never resolve)."""
         values = np.asarray(values, np.int32).ravel()
         if lengths is None:
             if segment_ids is None:
@@ -135,12 +201,35 @@ class QueryServer:
                     raise ValueError("segment_ids must be nondecreasing "
                                      "per request (documents back to back)")
         lengths = np.asarray(lengths, np.int64).ravel()
+        if len(lengths) == 0:
+            raise ValueError("request has no documents")
+        if (lengths <= 0).any():
+            # a zero/negative length silently shifts every later document's
+            # doc_ll slice in _dispatch — reject at the edge instead
+            bad = int(lengths[lengths <= 0][0])
+            raise ValueError(f"document lengths must be positive, got {bad} "
+                             f"(every document needs at least one token)")
         if int(lengths.sum()) != len(values):
             raise ValueError(f"lengths sum to {int(lengths.sum())}, "
                              f"got {len(values)} values")
         fut: Future = Future()
-        self._q.put(_Request(values, lengths, fut, time.time()))
-        return fut
+        req = _Request(values, lengths, fut, time.time())
+        # enqueue under the lifecycle lock: once stop() has set _stopped,
+        # nothing can enter the queue, so its single drain is complete and
+        # no future is ever stranded.  Backpressure (queue full) is a
+        # retry loop so the lock is never held while blocked.
+        while True:
+            with self._lock:
+                if self._stopped:
+                    raise RuntimeError(
+                        "query server stopped; submit() after stop() would "
+                        "enqueue into a dead dispatcher")
+                try:
+                    self._q.put_nowait(req)
+                    return fut
+                except queue.Full:
+                    pass
+            time.sleep(5e-4)
 
     # -- dispatch ----------------------------------------------------------
 
@@ -163,17 +252,23 @@ class QueryServer:
                     break
                 batch.append(req)
                 docs += len(req.lengths)
+            # the swap capture point: one (scorer, version) read per batch,
+            # after batch formation and before dispatch — a swap() lands
+            # between batches, never inside one
+            with self._lock:
+                fold, ver = self._foldin, self._version
             try:
-                self._dispatch(batch)
+                self._dispatch(batch, fold, ver)
             except Exception as e:                 # surface, don't die
                 for req in batch:
                     if not req.future.done():
                         req.future.set_exception(e)
 
-    def _dispatch(self, batch: list[_Request]) -> None:
+    def _dispatch(self, batch: list[_Request], fold: FoldIn,
+                  version: str) -> None:
         values = np.concatenate([r.values for r in batch])
         lengths = np.concatenate([r.lengths for r in batch])
-        res = self.foldin.score(values, lengths=lengths)
+        res = fold.score(values, lengths=lengths)
         t_done = time.time()
 
         off = 0
@@ -192,7 +287,8 @@ class QueryServer:
                 perplexity=float(np.exp(-ptl)) if n_tok else float("nan"),
                 n_tokens=n_tok, n_docs=nd, mixtures=mixtures,
                 batch_docs=res.n_docs,
-                latency_s=t_done - req.t_enqueue))
+                latency_s=t_done - req.t_enqueue,
+                artifact_version=version))
             off += nd
 
         with self._lock:
@@ -225,7 +321,10 @@ class QueryServer:
                                    if len(lat) else float("nan")),
                 "docs_per_s": self._n_docs / dt,
                 "tokens_per_s": self._n_tokens / dt,
-                "compiled_buckets": self.foldin.compiled_buckets,
+                "compiled_buckets": self._foldin.compiled_buckets,
+                "artifact_version": self._version,
+                "swaps": self._swaps,
+                "queue_depth": self._q.qsize(),
             }
 
 

@@ -1,0 +1,395 @@
+"""Streaming corpora + hot posterior refresh: writer commit / reader
+refresh, the growing-sampler determinism contract, SVI over a corpus that
+gains documents mid-run, the serving lifecycle (submit-after-stop,
+non-positive lengths), artifact hot-swap under concurrent load, and the
+elastic factorization validation fix."""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import models
+from repro.core.svi import SVI, SVIConfig
+from repro.data import (GrowingMinibatchSampler, MinibatchSampler,
+                        ShardedCorpus, ShardedCorpusWriter,
+                        ShardedMinibatchSampler, sharded_template)
+from repro.query import FoldIn, FoldInConfig, QueryClient, QueryServer
+
+
+def _lda():
+    return models.make("lda", alpha=0.1, beta=0.05, K=3, V=30)
+
+
+def _offsets(corpus):
+    return np.concatenate([[0], np.cumsum(corpus["lengths"])])
+
+
+def _write_prefix(corpus, path, n_docs, shard_tokens=500):
+    """A writer with the first ``n_docs`` documents committed."""
+    offs = _offsets(corpus)
+    w = ShardedCorpusWriter(str(path), shard_tokens=shard_tokens, vocab=30)
+    w.add_docs(corpus["tokens"][:offs[n_docs]], corpus["lengths"][:n_docs])
+    return w, w.commit()
+
+
+# ---------------------------------------------------------------------------
+# writer commit / reader refresh
+# ---------------------------------------------------------------------------
+
+def test_commit_publishes_openable_prefix(small_corpus, tmp_path):
+    w, sc = _write_prefix(small_corpus, tmp_path / "c", 30)
+    assert sc.n_docs == 30
+    offs = _offsets(small_corpus)
+    np.testing.assert_array_equal(sc.gather_tokens(np.arange(30)),
+                                  small_corpus["tokens"][:offs[30]])
+    # the writer stays open; close() publishes the rest
+    w.add_docs(small_corpus["tokens"][offs[30]:],
+               small_corpus["lengths"][30:])
+    full = w.close()
+    assert full.n_docs == 50
+    np.testing.assert_array_equal(full.resident()["tokens"],
+                                  small_corpus["tokens"])
+    with pytest.raises(RuntimeError, match="closed"):
+        w.commit()
+
+
+def test_refresh_picks_up_growth_without_invalidating_reads(small_corpus,
+                                                            tmp_path):
+    w, _ = _write_prefix(small_corpus, tmp_path / "c", 20)
+    rd = ShardedCorpus.open(str(tmp_path / "c"))
+    offs = _offsets(small_corpus)
+    before = rd.gather_tokens(np.arange(20))     # opens mmaps
+    assert rd.refresh() is False                 # no-op: nothing new
+    w.add_docs(small_corpus["tokens"][offs[20]:],
+               small_corpus["lengths"][20:])
+    w.commit()
+    assert rd.refresh() is True
+    assert rd.n_docs == 50
+    # doc ids are stable and the pre-refresh mmaps still serve reads
+    np.testing.assert_array_equal(rd.gather_tokens(np.arange(20)), before)
+    np.testing.assert_array_equal(rd.resident()["tokens"],
+                                  small_corpus["tokens"])
+    w.close()
+
+
+def test_refresh_rejects_shrinkage(small_corpus, tmp_path):
+    import shutil
+    w, rd = _write_prefix(small_corpus, tmp_path / "c", 30)
+    w.close()
+    shutil.rmtree(tmp_path / "c")
+    _write_prefix(small_corpus, tmp_path / "c", 10)[0].close()
+    with pytest.raises(ValueError, match="append-only"):
+        rd.refresh()
+
+
+def test_manifest_written_after_lengths(small_corpus, tmp_path):
+    """The commit protocol: the lengths file on disk is always a superset
+    of what the manifest claims, so a reader can never observe a manifest
+    pointing at missing docs (the 'torn commit' guard stays unreached)."""
+    w, sc = _write_prefix(small_corpus, tmp_path / "c", 30)
+    lengths = np.load(os.path.join(sc.path, "lengths.npy"))
+    assert len(lengths) == sc.manifest["n_docs"] == 30
+    assert sc.manifest["commit"] == 1
+    w.add_docs(small_corpus["tokens"][_offsets(small_corpus)[30]:],
+               small_corpus["lengths"][30:])
+    sc2 = w.close()
+    assert sc2.manifest["commit"] == 2
+    assert len(np.load(os.path.join(sc.path, "lengths.npy"))) == 50
+
+
+# ---------------------------------------------------------------------------
+# growing sampler: determinism contract
+# ---------------------------------------------------------------------------
+
+def test_growing_sampler_bitwise_matches_fixed_when_constant():
+    pop = np.arange(37, dtype=np.int64)
+    grow = GrowingMinibatchSampler(population=lambda: pop, batch_size=8,
+                                   seed=3)
+    fixed = MinibatchSampler(groups=pop, batch_size=8, seed=3)
+    for t in range(3 * fixed.batches_per_epoch):
+        np.testing.assert_array_equal(grow.batch_at(t), fixed.batch_at(t))
+    assert grow.batches_per_epoch == fixed.batches_per_epoch
+
+
+def test_growing_sampler_resnapshots_per_epoch():
+    state = {"n": 10}
+    s = GrowingMinibatchSampler(population=lambda: np.arange(state["n"]),
+                                batch_size=5, seed=0)
+    first_epoch = [s.batch_at(t) for t in range(s.batches_per_epoch)]
+    assert sorted(np.concatenate(first_epoch).tolist()) == list(range(10))
+    state["n"] = 20                      # docs arrive between epochs
+    assert s.population_at(0) == 10 and s.population_at(2) == 20
+    second = [s.batch_at(2 + i) for i in range(s.batches_per_epoch)]
+    seen = np.concatenate(second)        # epoch 2 covers the new snapshot
+    assert sorted(seen.tolist()) == list(range(20))
+    # recorded epochs replay exactly (seekable), regardless of later growth
+    for t, want in enumerate(first_epoch):
+        np.testing.assert_array_equal(s.batch_at(t), want)
+    assert s.epoch_log() == [(0, 10), (2, 20)]
+
+
+def test_growing_sampler_validates():
+    with pytest.raises(ValueError, match="batch_size"):
+        GrowingMinibatchSampler(population=lambda: np.arange(3),
+                                batch_size=0)
+    s = GrowingMinibatchSampler(population=lambda: np.arange(0),
+                                batch_size=4)
+    with pytest.raises(ValueError, match="no groups"):
+        s.batch_at(0)
+    with pytest.raises(ValueError, match=">= 0"):
+        GrowingMinibatchSampler(population=lambda: np.arange(3),
+                                batch_size=2).batch_at(-1)
+
+
+def test_sharded_grow_mode_excludes_holdout_and_caps_growth(small_corpus,
+                                                            tmp_path):
+    w, sc = _write_prefix(small_corpus, tmp_path / "c", 30)
+    hold = np.array([1, 7])
+    s = ShardedMinibatchSampler(corpus=sc, groups=np.arange(30),
+                                batch_size=7, seed=0, grow=True,
+                                exclude=hold, max_group=40)
+    epoch0 = np.concatenate([s.batch_at(t) for t in range(s.batches_per_epoch)])
+    assert not np.isin(hold, epoch0).any()
+    assert len(epoch0) == 28
+    offs = _offsets(small_corpus)
+    w.add_docs(small_corpus["tokens"][offs[30]:], small_corpus["lengths"][30:])
+    w.close()                            # grows to 50 > max_group=40
+    with pytest.raises(RuntimeError, match="capacity_docs"):
+        s.batch_at(1000)
+
+
+# ---------------------------------------------------------------------------
+# SVI over a growing corpus
+# ---------------------------------------------------------------------------
+
+def test_growing_svi_trains_through_appends(small_corpus, tmp_path):
+    w, sc = _write_prefix(small_corpus, tmp_path / "c", 30)
+    cfg = SVIConfig(batch_size=10, holdout_frac=0.1, holdout_every=4,
+                    pad_multiple=64, seed=0, growing=True, capacity_docs=64)
+    svi = SVI(_lda(), cfg, corpus=sc)
+    assert svi.program.meta["capacity_docs"] == 64
+    assert svi.program.meta["pstar_size"] == 30
+    state, h1 = svi.fit(steps=6)
+    offs = _offsets(small_corpus)
+    w.add_docs(small_corpus["tokens"][offs[30]:], small_corpus["lengths"][30:])
+    w.close()
+    state, h2 = svi.fit(steps=9, state=state)
+    svi.close()
+    assert np.isfinite(h2["heldout"][-1][1])
+    log = svi.sampler._inner.epoch_log()
+    assert log[-1][1] > log[0][1]        # the appended docs were trained on
+    # local rows exist for every appended doc (capacity pre-allocation)
+    theta = np.asarray(state.posteriors["theta"])
+    assert theta.shape[0] == 64 and np.isfinite(theta).all()
+
+
+def test_growing_config_validation(small_corpus, tmp_path):
+    _, sc = _write_prefix(small_corpus, tmp_path / "c", 30)
+    with pytest.raises(ValueError, match="growing"):
+        SVIConfig(capacity_docs=10)      # growth knobs need growing=True
+    with pytest.raises(ValueError, match="corpus"):
+        SVI(_lda(), SVIConfig(growing=True, capacity_docs=10))
+    with pytest.raises(ValueError, match="capacity_docs"):
+        SVI(_lda(), SVIConfig(growing=True), corpus=sc)
+    with pytest.raises(ValueError, match="headroom"):
+        SVI(sharded_template(_lda(), sc), SVIConfig(growing=True),
+            corpus=sc)
+    with pytest.raises(ValueError, match="below"):
+        sharded_template(_lda(), sc, capacity_docs=10)
+
+
+def test_population_vi_scale_is_pinned(small_corpus, tmp_path):
+    """population_size pins the stochastic scale G (population-VI): two
+    runs over the same fixed snapshot differ only through G, so their
+    first steps differ — and the pinned-G run is reproducible."""
+    _, sc = _write_prefix(small_corpus, tmp_path / "c", 30)
+    def run(pop):
+        cfg = SVIConfig(batch_size=10, pad_multiple=64, seed=0,
+                        growing=True, capacity_docs=40,
+                        population_size=pop)
+        svi = SVI(_lda(), cfg, corpus=ShardedCorpus.open(sc.path))
+        state, _ = svi.fit(steps=2)
+        svi.close()
+        return np.asarray(state.posteriors["phi"])
+    a, b, c = run(1000), run(1000), run(0)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+# ---------------------------------------------------------------------------
+# serving lifecycle + hot swap under load
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served(small_corpus):
+    """Two posterior artifacts of the same run (different step counts) and
+    the scoring corpus — the hot-swap scenario."""
+    from repro.core import make_engine
+    m = _lda()
+    m["x"].observe(small_corpus["tokens"],
+                   segment_ids=small_corpus["doc_ids"])
+    r1 = make_engine("svi", steps=4, batch_size=16, seed=0).fit(m)
+    r2 = make_engine("svi", steps=12, batch_size=16, seed=0).fit(m)
+    offs = _offsets(small_corpus)
+    docs = [small_corpus["tokens"][offs[i]:offs[i + 1]] for i in range(16)]
+    return {"p1": r1.freeze(m), "p2": r2.freeze(m), "docs": docs}
+
+
+def test_submit_after_stop_fails_fast(served):
+    fold = FoldIn(served["p1"], FoldInConfig(local_iters=1))
+    srv = QueryServer(fold).start()
+    srv.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        srv.submit(served["docs"][0])
+    with pytest.raises(RuntimeError, match="stopped"):
+        srv.start()                      # stop is final
+    with pytest.raises(RuntimeError, match="stopped"):
+        srv.swap(fold)
+
+
+def test_submit_rejects_non_positive_lengths(served):
+    srv = QueryServer(FoldIn(served["p1"], FoldInConfig(local_iters=1)))
+    v = np.arange(5, dtype=np.int32) % 3
+    with pytest.raises(ValueError, match="positive"):
+        srv.submit(v, lengths=[2, 0, 3])
+    with pytest.raises(ValueError, match="positive"):
+        srv.submit(v, lengths=[-1, 6])
+    with pytest.raises(ValueError, match="no documents"):
+        srv.submit(np.zeros(0, np.int32), lengths=[])
+    # sparse segment ids imply an empty doc -> same rejection
+    with pytest.raises(ValueError, match="positive"):
+        srv.submit(np.array([1, 2], np.int32), segment_ids=[0, 2])
+    srv.stop()
+
+
+def test_stop_submit_stress_no_stranded_futures(served):
+    """Threads hammer submit() while the server stops: every future either
+    resolves or fails with the stop error; none is left pending."""
+    fold = FoldIn(served["p1"], FoldInConfig(local_iters=1))
+    srv = QueryServer(fold, max_batch_docs=4, max_delay_s=0.001).start()
+    futures, rejected = [], []
+    flock = threading.Lock()
+    go = threading.Event()
+
+    def hammer():
+        go.wait()
+        for _ in range(50):
+            try:
+                f = srv.submit(np.array([1, 2, 3], np.int32))
+                with flock:
+                    futures.append(f)
+            except RuntimeError:
+                rejected.append(1)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    go.set()
+    srv.stop()
+    for t in threads:
+        t.join()
+    assert futures or rejected
+    for f in futures:
+        assert f.done()                  # nothing stranded
+        try:
+            f.result(timeout=0)
+        except RuntimeError as e:
+            assert "stopped" in str(e)
+
+
+def test_hot_swap_under_load_versions_every_response(served):
+    """Concurrent clients ride through >= 3 swaps: every future resolves
+    exactly once, every response names the artifact that scored it, and
+    both pre- and post-swap versions appear."""
+    fold = FoldIn(served["p1"], FoldInConfig(local_iters=1))
+    srv = QueryServer(fold, max_batch_docs=8, max_delay_s=0.002).start()
+    client = QueryClient(srv, timeout_s=60)
+    docs = served["docs"]
+    results, errors = [], []
+    rlock = threading.Lock()
+    stop_flag = threading.Event()
+
+    def drive(i):
+        j = 0
+        while not stop_flag.is_set():
+            try:
+                r = client.score(docs[(i + j) % len(docs)])
+                with rlock:
+                    results.append(r)
+            except Exception as e:       # pragma: no cover - fails the test
+                errors.append(e)
+            j += 1
+
+    threads = [threading.Thread(target=drive, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+
+    def wait_for_version(ver, timeout=60.0):
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            with rlock:
+                if any(r.artifact_version == ver for r in results):
+                    return
+            time.sleep(0.005)
+        raise AssertionError(f"no response scored by {ver} within timeout")
+
+    versions = ["v0"]
+    current = fold
+    wait_for_version("v0")
+    for _ in range(3):
+        current = current.with_posterior(
+            served["p2" if len(versions) % 2 else "p1"])
+        versions.append(srv.swap(current))
+        wait_for_version(versions[-1])
+    stop_flag.set()
+    for t in threads:
+        t.join()
+    srv.stop()
+    assert not errors
+    seen = {r.artifact_version for r in results}
+    assert seen <= set(versions)
+    assert "v0" in seen and versions[-1] in seen
+    assert srv.stats()["swaps"] == 3
+    # warm swap: same shapes -> the compiled bucket cache was shared, so
+    # serving 4 artifacts compiled no more buckets than one would
+    assert current._fns is fold._fns
+
+
+def test_with_posterior_shares_cache_only_on_matching_shape(served):
+    fold = FoldIn(served["p1"], FoldInConfig(local_iters=2))
+    fold.score(served["docs"][0])
+    warm = fold.with_posterior(served["p2"])
+    assert warm._fns is fold._fns and warm._proto is fold._proto
+    assert warm.compiled_buckets == fold.compiled_buckets >= 1
+    # scores differ (different artifact) but run through the shared scorer
+    a = fold.score(served["docs"][1])
+    b = warm.score(served["docs"][1])
+    assert a.caps == b.caps
+    assert a.elbo != b.elbo
+
+
+# ---------------------------------------------------------------------------
+# elastic factorization validation
+# ---------------------------------------------------------------------------
+
+def test_factor_counts_rounds_want_model_down():
+    from repro.launch.elastic import factor_counts
+    assert factor_counts(6, want_model=4) == (3, 2)
+    assert factor_counts(8, want_model=4) == (2, 4)
+    assert factor_counts(8, want_model=0) == (8, 1)
+    assert factor_counts(7, want_model=4) == (7, 1)
+
+
+def test_remesh_validates_against_actual_factorization(tmp_path):
+    """n=6, want_model=4 factors as data=3 x model=2; a global batch of 4
+    is not divisible by data=3 and must be rejected up front (the old
+    check against want_model let it through to fail deep in train)."""
+    from repro.configs import RunConfig
+    from repro.launch.elastic import remesh_and_resume
+    run = RunConfig(global_batch=4)
+    with pytest.raises(ValueError, match="data=3"):
+        remesh_and_resume(None, run, str(tmp_path), n_devices=6,
+                          want_model=4)
