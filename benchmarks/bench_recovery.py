@@ -1,0 +1,121 @@
+"""Crash-safety cost: what fault tolerance charges the hot paths.
+
+Four numbers (the ``docs/fault_tolerance.md`` acceptance accounting):
+
+1. *Checkpoint overhead* — the same SVI fit with and without session
+   checkpointing (async commit, every 5 steps): the %% the training loop
+   pays for durability.
+2. *Per-save cost* — one blocking self-validating checkpoint commit
+   (serialize + checksum + fsync + atomic replace) of a session-sized
+   tree, in ms.
+3. *Resume latency* — crash-to-training-again: load + validate the newest
+   session, rebuild (state, sampler cursor, holdout), and run the first
+   step (includes the re-jit a fresh process pays).
+4. *Writer reopen* — adopting a committed sharded store after a writer
+   crash (manifest adoption + orphan sweep + per-shard header checks).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import SVI, SVIConfig, models
+from repro.data import ShardedCorpus, ShardedCorpusWriter
+
+K, V, N_DOCS, MEAN_LEN = 8, 500, 400, 80
+STEPS, EVERY = 40, 5
+
+
+def _corpus(seed: int = 0):
+    from repro.data import SyntheticCorpus
+    return SyntheticCorpus(n_docs=N_DOCS, vocab=V, n_topics=K,
+                           mean_len=MEAN_LEN, seed=seed).generate()
+
+
+def _svi(corpus):
+    m = models.make("lda", alpha=0.1, beta=0.05, K=K, V=V)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    return SVI(m.compile(), SVIConfig(batch_size=64, holdout_frac=0.05,
+                                      holdout_every=10, seed=0))
+
+
+def run(report):
+    corpus = _corpus()
+    tmp = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        # -- 1. checkpoint overhead on the training loop
+        svi = _svi(corpus)
+        svi.fit(steps=12)   # compile (incl. the holdout eval at step 10)
+                            # outside the timings
+        t0 = time.time()
+        svi.fit(steps=STEPS)
+        t_plain = time.time() - t0
+        d = os.path.join(tmp, "ck")
+        t0 = time.time()
+        svi.fit(steps=STEPS, checkpoint_dir=d, checkpoint_every=EVERY)
+        t_ck = time.time() - t0
+        overhead = (t_ck - t_plain) / t_plain * 100.0
+        n_saves = STEPS // EVERY
+        report("recovery_checkpoint_overhead", t_ck / STEPS * 1e6,
+               f"overhead_pct={overhead:.1f};plain_us="
+               f"{t_plain / STEPS * 1e6:.0f};saves={n_saves};every={EVERY}",
+               overhead_pct=round(overhead, 2))
+
+        # -- 2. one blocking self-validating commit of a session-sized tree
+        from repro.checkpoint import session as _session
+        from repro.checkpoint import store as _store
+        state, history = svi.fit(steps=1)
+        sess = svi._snapshot_session(state, history)
+        tree, meta = _session._to_tree(sess), _session._meta(sess)
+        nbytes = sum(np.asarray(v).nbytes
+                     for v in (tree["posteriors"] |
+                               {k: v for k, v in tree.items()
+                                if k != "posteriors"}).values())
+        d2 = os.path.join(tmp, "save")
+        reps, t0 = 5, time.time()
+        for i in range(reps):
+            _store.save(d2, i, tree, meta=meta)
+        per_save = (time.time() - t0) / reps
+        report("recovery_session_save", per_save * 1e6,
+               f"ms={per_save * 1e3:.2f};bytes={nbytes};"
+               f"mb_per_s={nbytes / per_save / 1e6:.0f}",
+               save_ms=round(per_save * 1e3, 3))
+
+        # -- 3. crash-to-training-again latency (fresh process stand-in:
+        #       a new SVI instance pays validate + adopt + re-jit + step 1)
+        svi.close()
+        t0 = time.time()
+        fresh = _svi(corpus)
+        fresh.fit(steps=1, checkpoint_dir=d, resume_from=True)
+        t_resume = time.time() - t0
+        t0 = time.time()
+        _session.load_session(d)
+        t_load = time.time() - t0
+        report("recovery_resume_latency", t_resume * 1e6,
+               f"total_ms={t_resume * 1e3:.0f};"
+               f"load_validate_ms={t_load * 1e3:.2f}",
+               resume_ms=round(t_resume * 1e3, 1))
+        fresh.close()
+
+        # -- 4. writer reopen (manifest adoption + header checks)
+        cdir = os.path.join(tmp, "corpus")
+        lengths = np.asarray(corpus["lengths"], np.int64)
+        w = ShardedCorpusWriter(cdir, shard_tokens=1 << 12, vocab=V)
+        w.add_docs(corpus["tokens"], lengths)
+        sc = w.commit()                       # writer "crashes" here
+        n_shards = len(sc.manifest["shards"])
+        reps, t0 = 10, time.time()
+        for _ in range(reps):
+            ShardedCorpusWriter.reopen(cdir)
+        per_reopen = (time.time() - t0) / reps
+        report("recovery_writer_reopen", per_reopen * 1e6,
+               f"ms={per_reopen * 1e3:.2f};shards={n_shards};"
+               f"docs={sc.n_docs}",
+               reopen_ms=round(per_reopen * 1e3, 3))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

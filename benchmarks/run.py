@@ -19,6 +19,9 @@
                      held-out target (growing sampler + live commits) and
                      >= 3 hot artifact swaps under concurrent client load
                      (swap install latency, zero dropped requests)
+    bench_recovery   crash-safety cost: checkpoint overhead on the training
+                     loop, per-commit ms of a self-validating session save,
+                     crash-to-training-again resume latency, writer reopen
 
 Prints ``name,us_per_call,derived`` CSV.  Select modules with
 ``python -m benchmarks.run [vmp|scaling|partition|kernels] ...``.
@@ -37,12 +40,13 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_kernels, bench_outofcore, bench_partition,
-                            bench_query, bench_scaling, bench_streaming,
-                            bench_svi, bench_vmp)
+                            bench_query, bench_recovery, bench_scaling,
+                            bench_streaming, bench_svi, bench_vmp)
     mods = {"vmp": bench_vmp, "scaling": bench_scaling,
             "partition": bench_partition, "kernels": bench_kernels,
             "svi": bench_svi, "outofcore": bench_outofcore,
-            "query": bench_query, "streaming": bench_streaming}
+            "query": bench_query, "streaming": bench_streaming,
+            "recovery": bench_recovery}
     args = sys.argv[1:]
     json_mode = "--json" in args
     picks = [a for a in args if a in mods] or list(mods)

@@ -1,93 +1,330 @@
-"""Fault-tolerant checkpointing for pytrees (VMP state and LM train state).
+"""Fault-tolerant, self-validating checkpointing for pytrees.
 
 The paper checkpoints the message-passing graph to HDFS every k iterations to
 bound RDD lineage (section 4.2).  Here the motive is crash/restart fault
 tolerance on a large cluster, but the knob is the same: ``every_k``.
 
+Format (v2): one atomic ``step_<n>.npz`` file per step containing every leaf
+plus a ``__manifest__`` JSON entry recording step, leaf count, treedef, and a
+per-leaf ``{path, shape, dtype, crc32}`` record.  The manifest makes every
+checkpoint *self-validating*: :func:`validate` detects truncation, bit rot,
+and shape/dtype drift and reports exactly which leaves are damaged.
+
 Guarantees:
-  - **atomicity** — a checkpoint is written to a temp dir and renamed into
-    place; readers only ever see complete checkpoints (a manifest file is the
-    commit record, written last).
-  - **async** — serialization happens on the caller, the fsync+rename on a
-    background thread, keeping the save off the step critical path.
+  - **atomicity, no loss window** — a checkpoint is serialized to a unique
+    temp file, fsync'd, and ``os.replace``'d into place.  Re-saving a step
+    never deletes the complete copy first (the old v1 layout's
+    ``rmtree``-then-``rename`` could destroy the only copy of a step if the
+    process died between the two calls).
+  - **validation with fallback** — :func:`restore` checksums the newest
+    checkpoint and, on corruption, warns with the exact damage and falls
+    back to the newest *valid* step instead of dying.
+  - **structure checks** — restoring into a ``tree_like`` whose leaf count
+    disagrees with the file raises an error naming the path and mismatch
+    (a stale ``tree_like`` used to produce garbage states silently).
+  - **async** — serialization happens on the caller, the fsync+replace on a
+    background thread, keeping the save off the step critical path;
+    ``CheckpointStore.wait()`` re-raises failed commits.
   - **keep-k** — older checkpoints are garbage collected.
-  - **resume** — ``latest_step``/``restore`` find the newest complete
-    checkpoint, so a restarted job continues bitwise-identically (the data
-    pipeline is seekable by step).
+
+Crash-safety of the protocol itself is provable via the injection points
+``checkpoint.save.pre_replace`` / ``post_replace`` (see
+``repro/testing/faults.py`` and ``docs/fault_tolerance.md``).
 """
 
 from __future__ import annotations
 
+import itertools
 import json
 import os
-import shutil
+import re
 import threading
 import time
+import warnings
+import zlib
 
 import jax
 import numpy as np
 
-_MANIFEST = "manifest.json"
+from repro.testing import faults
+
+FORMAT = "repro-checkpoint"
+VERSION = 2
+_MANIFEST_KEY = "__manifest__"
+_FILE_RE = re.compile(r"^step_(\d{10})\.npz$")
+_TMP_COUNT = itertools.count()
 
 
-def _flatten(tree) -> tuple[list[np.ndarray], object]:
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return [np.asarray(x) for x in leaves], treedef
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed validation; ``problems`` itemizes the damage."""
+
+    def __init__(self, path: str, problems: list[str]):
+        self.path = str(path)
+        self.problems = list(problems)
+        super().__init__(
+            f"corrupt checkpoint {self.path}: " + "; ".join(self.problems))
 
 
-def save(directory: str, step: int, tree) -> str:
-    """Write one checkpoint (blocking); returns its path.  Async commits are
-    the :class:`CheckpointStore`'s job — it tracks the threads so failures
-    and stragglers surface in ``wait()`` instead of dying silently."""
+def _step_file(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{int(step):010d}.npz")
+
+
+def _key_part(k) -> tuple[str, bool]:
+    """(path component, is-plain-dict-key) for one treedef key entry."""
+    if isinstance(k, jax.tree_util.DictKey):
+        key = k.key
+        if isinstance(key, str) and "/" not in key:
+            return key, True
+        return str(key), False
+    for attr in ("idx", "name", "key"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr)), False
+    return str(k), False
+
+
+def _flatten_with_paths(tree):
+    keyed, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves, paths, dict_tree = [], [], True
+    for kp, leaf in keyed:
+        parts = []
+        for k in kp:
+            part, plain = _key_part(k)
+            dict_tree = dict_tree and plain
+            parts.append(part)
+        paths.append("/".join(parts) if parts else "<root>")
+        leaves.append(np.asarray(leaf))
+    return leaves, paths, treedef, dict_tree
+
+
+def _fsync_dir(directory: str) -> None:
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:                        # pragma: no cover - exotic fs
+        return
+    try:
+        os.fsync(fd)
+    except OSError:                        # pragma: no cover
+        pass
+    finally:
+        os.close(fd)
+
+
+def save(directory: str, step: int, tree, meta: dict | None = None) -> str:
+    """Write one checkpoint (blocking); returns its path.
+
+    Serializes to a unique temp file, fsyncs, then atomically
+    ``os.replace``s into place — a crash at any point leaves either the old
+    complete checkpoint or the new one, never neither.  ``meta`` (JSON-able
+    dict) rides in the manifest and comes back from :func:`load`.
+    """
     os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, f"step_{step:010d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
-    leaves, treedef = _flatten(tree)
-    np.savez(os.path.join(tmp, "leaves.npz"),
-             **{f"leaf_{i}": leaf for i, leaf in enumerate(leaves)})
-    with open(os.path.join(tmp, _MANIFEST), "w") as f:
-        json.dump({"step": step, "n_leaves": len(leaves),
-                   "treedef": str(treedef), "time": time.time()}, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    leaves, paths, treedef, dict_tree = _flatten_with_paths(tree)
+    arrays, records = {}, []
+    for i, (leaf, path) in enumerate(zip(leaves, paths)):
+        name = f"leaf_{i:05d}"
+        arrays[name] = leaf
+        records.append({"name": name, "path": path,
+                        "shape": list(leaf.shape), "dtype": str(leaf.dtype),
+                        "crc32": zlib.crc32(leaf.tobytes())})
+    manifest = {"format": FORMAT, "version": VERSION, "step": int(step),
+                "n_leaves": len(leaves), "treedef": str(treedef),
+                "dict_tree": bool(dict_tree), "leaves": records,
+                "meta": meta or {}, "time": time.time()}
+    blob = np.frombuffer(json.dumps(manifest).encode(), np.uint8)
+    final = _step_file(directory, step)
+    tmp = final + f".tmp-{os.getpid()}-{next(_TMP_COUNT)}"
+    with open(tmp, "wb") as fh:
+        np.savez(fh, **{_MANIFEST_KEY: blob}, **arrays)
+        fh.flush()
+        os.fsync(fh.fileno())
+    faults.trip("checkpoint.save.pre_replace")
+    os.replace(tmp, final)
+    faults.trip("checkpoint.save.post_replace")
+    _fsync_dir(directory)
     return final
 
 
-def _complete_steps(directory: str) -> list[int]:
+def read_manifest(path: str) -> dict:
+    """Parse a checkpoint's manifest (no leaf validation)."""
+    try:
+        with np.load(path) as data:
+            if _MANIFEST_KEY not in data.files:
+                raise CheckpointCorruptError(path, ["missing manifest entry"])
+            manifest = json.loads(bytes(data[_MANIFEST_KEY]))
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:
+        raise CheckpointCorruptError(
+            path, [f"unreadable ({type(e).__name__}: {e})"])
+    if manifest.get("format") != FORMAT:
+        raise CheckpointCorruptError(
+            path, [f"not a {FORMAT} file (format={manifest.get('format')!r})"])
+    return manifest
+
+
+def validate(path: str) -> dict:
+    """Fully validate a checkpoint file; returns its manifest.
+
+    Checks the zip container, manifest presence/format, leaf inventory, and
+    per-leaf shape/dtype/crc32.  Raises :class:`CheckpointCorruptError`
+    whose ``problems`` name each damaged leaf by its tree path.
+    """
+    manifest = read_manifest(path)
+    problems: list[str] = []
+    try:
+        with np.load(path) as data:
+            names = set(data.files) - {_MANIFEST_KEY}
+            if manifest["n_leaves"] != len(manifest["leaves"]):
+                problems.append("manifest leaf count inconsistent")
+            for rec in manifest["leaves"]:
+                if rec["name"] not in names:
+                    problems.append(f"leaf {rec['path']!r}: entry missing")
+                    continue
+                arr = data[rec["name"]]
+                if list(arr.shape) != list(rec["shape"]):
+                    problems.append(
+                        f"leaf {rec['path']!r}: shape {list(arr.shape)} != "
+                        f"manifest {rec['shape']}")
+                elif str(arr.dtype) != rec["dtype"]:
+                    problems.append(
+                        f"leaf {rec['path']!r}: dtype {arr.dtype} != "
+                        f"manifest {rec['dtype']}")
+                elif zlib.crc32(np.ascontiguousarray(arr).tobytes()) \
+                        != rec["crc32"]:
+                    problems.append(f"leaf {rec['path']!r}: checksum mismatch")
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:
+        raise CheckpointCorruptError(
+            path, [f"unreadable ({type(e).__name__}: {e})"])
+    if problems:
+        raise CheckpointCorruptError(path, problems)
+    return manifest
+
+
+def complete_steps(directory: str) -> list[int]:
+    """Steps with a fully-replaced checkpoint file (tmp files are ignored).
+    Completeness is the atomic replace; validity is :func:`validate`."""
     if not os.path.isdir(directory):
         return []
     out = []
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(directory, name, _MANIFEST)):
-                out.append(int(name.split("_")[1]))
+        m = _FILE_RE.match(name)
+        if m:
+            out.append(int(m.group(1)))
     return sorted(out)
 
 
 def latest_step(directory: str) -> int | None:
-    steps = _complete_steps(directory)
+    steps = complete_steps(directory)
     return steps[-1] if steps else None
 
 
-def restore(directory: str, tree_like, step: int | None = None):
-    """Restore into the structure of ``tree_like``; newest step by default."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no complete checkpoint in {directory}")
-    path = os.path.join(directory, f"step_{step:010d}")
-    data = np.load(os.path.join(path, "leaves.npz"))
-    leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
-    _, treedef = jax.tree_util.tree_flatten(tree_like)
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+def latest_valid_step(directory: str) -> int | None:
+    """Newest step that passes full validation (None if none do)."""
+    for s in reversed(complete_steps(directory)):
+        try:
+            validate(_step_file(directory, s))
+            return s
+        except CheckpointCorruptError:
+            continue
+    return None
+
+
+def _assemble(path: str, manifest: dict, tree_like):
+    with np.load(path) as data:
+        leaves = [data[rec["name"]] for rec in manifest["leaves"]]
+    if tree_like is not None:
+        _, treedef = jax.tree_util.tree_flatten(tree_like)
+        if treedef.num_leaves != len(leaves):
+            sample = ", ".join(r["path"] for r in manifest["leaves"][:6])
+            raise ValueError(
+                f"checkpoint {path} holds {len(leaves)} leaves but the "
+                f"provided tree_like has {treedef.num_leaves} — stale or "
+                f"mismatched model structure?  (checkpoint leaf paths: "
+                f"{sample}{', ...' if len(leaves) > 6 else ''})")
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+    if not manifest.get("dict_tree"):
+        raise ValueError(
+            f"checkpoint {path} contains non-dict tree nodes; pass "
+            f"tree_like= to reconstruct it")
+    out: dict = {}
+    for rec, leaf in zip(manifest["leaves"], leaves):
+        node = out
+        parts = rec["path"].split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return out
+
+
+def load(directory: str, tree_like=None, step: int | None = None):
+    """Validate and load a checkpoint; returns ``(tree, manifest)``.
+
+    With ``step=None`` picks the newest step, falling back (with a
+    ``RuntimeWarning`` naming the damage) past corrupted checkpoints to the
+    newest valid one.  An explicit ``step=`` never falls back — corruption
+    raises :class:`CheckpointCorruptError` with the itemized damage.
+    With ``tree_like=None`` the tree is reconstructed from the manifest's
+    leaf paths (pure-dict trees only).
+    """
+    steps = complete_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no complete checkpoint in {directory}")
+    if step is not None:
+        if step not in steps:
+            raise FileNotFoundError(
+                f"no checkpoint for step {step} in {directory} "
+                f"(have {steps})")
+        path = _step_file(directory, step)
+        manifest = validate(path)
+        return _assemble(path, manifest, tree_like), manifest
+    failures: list[CheckpointCorruptError] = []
+    for s in reversed(steps):
+        path = _step_file(directory, s)
+        try:
+            manifest = validate(path)
+        except CheckpointCorruptError as e:
+            warnings.warn(
+                f"skipping corrupt checkpoint {path} "
+                f"({'; '.join(e.problems)}); falling back to an older step",
+                RuntimeWarning, stacklevel=2)
+            failures.append(e)
+            continue
+        return _assemble(path, manifest, tree_like), manifest
+    raise CheckpointCorruptError(
+        directory, [f"every checkpoint is corrupt: "
+                    f"{'; '.join(str(e) for e in failures)}"])
+
+
+def restore(directory: str, tree_like=None, step: int | None = None):
+    """Restore a checkpoint tree (see :func:`load` for the full contract)."""
+    tree, _ = load(directory, tree_like, step)
+    return tree
+
+
+def clean_tmp(directory: str) -> int:
+    """Remove leftover ``*.npz.tmp-*`` files from crashed saves.  Only safe
+    when no save is in flight against ``directory`` (single-writer rule)."""
+    if not os.path.isdir(directory):
+        return 0
+    n = 0
+    for name in os.listdir(directory):
+        if ".npz.tmp-" in name:
+            try:
+                os.remove(os.path.join(directory, name))
+                n += 1
+            except OSError:                # pragma: no cover - races
+                pass
+    return n
 
 
 class CheckpointStore:
-    """every-k checkpointing with keep-k GC and async commit."""
+    """every-k checkpointing with keep-k GC and async commit.
+
+    One store owns one directory (single-writer).  Construction sweeps tmp
+    litter left by a previous crashed process.
+    """
 
     def __init__(self, directory: str, every: int = 10, keep: int = 3,
                  blocking: bool = False):
@@ -97,20 +334,22 @@ class CheckpointStore:
         self.blocking = blocking
         self._pending: list[threading.Thread] = []
         self._errors: list[BaseException] = []
+        clean_tmp(directory)
 
-    def maybe_save(self, step: int, tree) -> bool:
-        if step % self.every != 0:
+    def maybe_save(self, step: int, tree, meta: dict | None = None,
+                   force: bool = False) -> bool:
+        if not force and step % self.every != 0:
             return False
         # leaves must be host-complete before the async thread serializes
         tree = jax.tree_util.tree_map(np.asarray, tree)
         if self.blocking:
-            save(self.directory, step, tree)
+            save(self.directory, step, tree, meta=meta)
         else:
             # tracked (non-fire-and-forget) async commit: wait() joins them,
             # so a run's final checkpoint is durable before the run returns
-            def _commit(s=step, tr=tree):
+            def _commit(s=step, tr=tree, m=meta):
                 try:
-                    save(self.directory, s, tr)
+                    save(self.directory, s, tr, meta=m)
                 except BaseException as e:          # surfaced by wait()
                     self._errors.append(e)
 
@@ -133,15 +372,18 @@ class CheckpointStore:
             raise RuntimeError("async checkpoint save failed") from err
 
     def _gc(self):
-        steps = _complete_steps(self.directory)
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
-                          ignore_errors=True)
+        # never removes the newest keep-k complete steps; corrupt files
+        # age out the same way so fallback candidates stay bounded
+        for s in complete_steps(self.directory)[:-self.keep]:
+            try:
+                os.remove(_step_file(self.directory, s))
+            except OSError:                # pragma: no cover - races
+                pass
 
     def latest(self) -> int | None:
         self.wait()
         return latest_step(self.directory)
 
-    def restore(self, tree_like, step: int | None = None):
+    def restore(self, tree_like=None, step: int | None = None):
         self.wait()
         return restore(self.directory, tree_like, step)

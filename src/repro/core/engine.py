@@ -61,6 +61,12 @@ class EngineConfig:
                                     # population every epoch (streaming)
     capacity_docs: int = 0          # growing: pre-allocated local-row ceiling
     population_size: int = 0        # growing: population-VI assumed G
+    # crash safety (vmp-holdout/svi paths; see docs/fault_tolerance.md)
+    checkpoint_dir: Optional[str] = None  # session checkpoint directory
+    checkpoint_every: int = 10      # steps between session commits
+    resume: bool = False            # continue from checkpoint_dir's newest
+                                    # valid session; steps is then the TOTAL
+                                    # budget (only the remainder runs)
     # gibbs
     burnin: Optional[int] = None    # default: steps // 2
     thin: int = 1
@@ -202,8 +208,19 @@ def _fit_svi(model, cfg: EngineConfig, full_batch: bool) -> InferenceResult:
         target, n_groups = model, cfg.corpus.n_docs
     svi = SVI(target, _svi_config(cfg, full_batch, n_groups),
               plan=cfg.sharding, corpus=cfg.corpus)
+    steps, resumed_from = cfg.steps, None
+    if cfg.resume:
+        if cfg.checkpoint_dir is None:
+            raise ValueError("resume=True needs checkpoint_dir=")
+        from repro.checkpoint import latest_session_step
+        resumed_from = latest_session_step(cfg.checkpoint_dir)
+        # steps is the total budget; run only what the session hasn't
+        steps = max(cfg.steps - (resumed_from or 0), 0)
     try:
-        state, history = svi.fit(steps=cfg.steps)
+        state, history = svi.fit(
+            steps=steps, checkpoint_dir=cfg.checkpoint_dir,
+            checkpoint_every=cfg.checkpoint_every,
+            resume_from=True if cfg.resume else None)
     finally:
         svi.close()
     posts = {n: np.asarray(p) for n, p in state.posteriors.items()}
@@ -212,7 +229,8 @@ def _fit_svi(model, cfg: EngineConfig, full_batch: bool) -> InferenceResult:
                            {"steps": cfg.steps,
                             "batch_size": svi.sampler.batch_size,
                             "n_train_groups": len(svi.train),
-                            "n_holdout_groups": len(svi.holdout)})
+                            "n_holdout_groups": len(svi.holdout),
+                            "resumed_from_step": resumed_from})
 
 
 class GibbsEngine(InferenceEngine):

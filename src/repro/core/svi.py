@@ -645,23 +645,135 @@ class SVI:
         if hasattr(self.sampler, "close"):
             self.sampler.close()
 
+    # -- crash-safe sessions -------------------------------------------------
+
+    def _fingerprint(self) -> dict:
+        from repro.checkpoint.session import session_fingerprint
+        return session_fingerprint(self.program, self.cfg,
+                                   batch_size=self.sampler.batch_size)
+
+    def _snapshot_session(self, state: VMPState, history: dict):
+        """Host-side resumable snapshot of the fit at ``state.step``."""
+        from repro.checkpoint.session import TrainSession
+        epochs = []
+        snap = getattr(self.sampler, "epoch_snapshots", None)
+        if snap is not None:
+            epochs = snap()
+        corpus = None
+        if self.corpus is not None:
+            corpus = {"n_docs": int(self.corpus.n_docs),
+                      "n_tokens": int(self.corpus.n_tokens),
+                      "n_shards": int(self.corpus.n_shards)}
+        return TrainSession(
+            posteriors={n: np.asarray(v)
+                        for n, v in state.posteriors.items()},
+            t=int(state.step),
+            history={"elbo": list(history["elbo"]),
+                     "heldout": list(history["heldout"])},
+            epochs=epochs, holdout=np.asarray(self.holdout, np.int64),
+            corpus=corpus, fingerprint=self._fingerprint())
+
+    def _adopt_session(self, sess, where: str):
+        """Rebuild (state, history) from a session; reseats the sampler
+        cursor and the held-out split so the continuation is bitwise."""
+        from repro.checkpoint.session import check_fingerprint
+        check_fingerprint(sess.fingerprint, self._fingerprint(), where)
+        if self.corpus is not None and sess.corpus:
+            self.corpus.refresh()
+            if int(self.corpus.n_docs) < int(sess.corpus["n_docs"]):
+                raise ValueError(
+                    f"refusing to resume from {where}: corpus has "
+                    f"{self.corpus.n_docs} docs but the session saw "
+                    f"{sess.corpus['n_docs']} — append-only stores never "
+                    f"shrink; is this the right corpus directory?")
+        hold = np.asarray(sess.holdout, np.int64)
+        if self.cfg.growing:
+            # the split was drawn against the corpus size at first build;
+            # adopt it (and the epoch snapshots) rather than re-deriving
+            self.holdout = hold
+            self.sampler.exclude = hold
+            self.sampler.restore_epochs(sess.epochs)
+        elif not np.array_equal(hold, self.holdout):
+            raise ValueError(
+                f"refusing to resume from {where}: held-out split differs "
+                f"from the session's (corpus or seed changed?)")
+        state = VMPState(
+            {n: jnp.asarray(v) for n, v in sess.posteriors.items()},
+            jnp.asarray(sess.t, jnp.int32))
+        history = {"elbo": list(sess.history["elbo"]),
+                   "heldout": list(sess.history["heldout"])}
+        return state, history
+
     def fit(self, steps: int, state: Optional[VMPState] = None,
-            callback=None):
+            callback=None, *, checkpoint_dir: Optional[str] = None,
+            checkpoint_every: int = 10, checkpoint_keep: int = 3,
+            resume_from=None):
         """Run ``steps`` minibatch updates; resumes the schedule from
         ``state.step``.  ``callback(t, batch_elbo) -> False`` stops early
-        (the full-batch engine's callback contract)."""
+        (the full-batch engine's callback contract).
+
+        **Crash safety**: with ``checkpoint_dir`` a resumable
+        :class:`~repro.checkpoint.TrainSession` is committed (async,
+        self-validating — see ``docs/fault_tolerance.md``) every
+        ``checkpoint_every`` steps and at the end of the run.
+        ``resume_from=`` a directory (or ``True`` for ``checkpoint_dir``
+        itself) restores the newest valid session and continues
+        bitwise-identically: state, Robbins-Monro position, sampler
+        cursor, held-out split, and the accumulated history all carry
+        over; a session written by a mismatched model/config is refused.
+        ``resume_from=True`` with no session yet is a cold start, so the
+        always-on loop can use one code path.  ``steps`` counts the
+        updates *this call* runs (on resume: the remaining budget).
+        """
+        from repro.checkpoint import CheckpointStore
+        from repro.checkpoint import session as _session
+        from repro.testing import faults
+
+        store = None
+        if checkpoint_dir is not None:
+            store = CheckpointStore(checkpoint_dir,
+                                    every=max(1, checkpoint_every),
+                                    keep=checkpoint_keep)
+        resume_dir = None
+        if resume_from is True:
+            if checkpoint_dir is None:
+                raise ValueError("resume_from=True needs checkpoint_dir=")
+            resume_dir = checkpoint_dir
+        elif resume_from:
+            resume_dir = str(resume_from)
+        history = {"elbo": [], "heldout": []}
+        if resume_dir is not None:
+            if state is not None:
+                raise ValueError("pass state= or resume_from=, not both")
+            try:
+                sess = _session.load_session(resume_dir)
+            except FileNotFoundError:
+                if resume_from is not True:
+                    raise
+                sess = None                      # cold start of the loop
+            if sess is not None:
+                state, history = self._adopt_session(sess, resume_dir)
         if state is None:
             state = init_state(self.program, self.cfg.seed)
-        history = {"elbo": [], "heldout": []}
         start = int(state.step)
-        for t in range(start, start + steps):
-            state, elbo = self.step(t, state)
-            elbo_f = float(elbo)
-            history["elbo"].append(elbo_f)
-            if (len(self.holdout) and self.cfg.holdout_every
-                    and ((t + 1) % self.cfg.holdout_every == 0
-                         or t == start + steps - 1)):
-                history["heldout"].append((t, self.heldout_elbo(state)))
-            if callback is not None and callback(t, elbo_f) is False:
-                break
+        try:
+            for t in range(start, start + steps):
+                faults.trip("svi.step")
+                state, elbo = self.step(t, state)
+                elbo_f = float(elbo)
+                history["elbo"].append(elbo_f)
+                if (len(self.holdout) and self.cfg.holdout_every
+                        and ((t + 1) % self.cfg.holdout_every == 0
+                             or t == start + steps - 1)):
+                    history["heldout"].append((t, self.heldout_elbo(state)))
+                if store is not None and (
+                        (t + 1) % store.every == 0 or t == start + steps - 1):
+                    _session.save_session(
+                        store, self._snapshot_session(state, history),
+                        force=True)
+                if callback is not None and callback(t, elbo_f) is False:
+                    break
+        finally:
+            if store is not None:
+                store.wait()
         return state, history

@@ -221,6 +221,37 @@ class GrowingMinibatchSampler:
         with self._lock:
             return [(s, len(g)) for s, g in self._epochs]
 
+    def epoch_snapshots(self) -> list[tuple[int, np.ndarray]]:
+        """Copies of the full per-epoch records ``[(start_step, groups)]``
+        — the sampler's resumable cursor (``epoch_log`` with the frozen
+        group arrays, which a restarted process cannot re-derive from a
+        since-grown corpus)."""
+        with self._lock:
+            return [(s, g.copy()) for s, g in self._epochs]
+
+    def restore_epochs(self, records: list[tuple[int, np.ndarray]]) -> None:
+        """Reseat the cursor from :meth:`epoch_snapshots` — replay of every
+        recorded step is then bitwise-identical to the run that saved them.
+        Only valid before this sampler has snapshotted anything itself."""
+        with self._lock:
+            if self._epochs:
+                raise RuntimeError(
+                    "restore_epochs() must run before the sampler has "
+                    "snapshotted any epoch of its own")
+            end = 0
+            cleaned = []
+            for start, groups in records:
+                groups = np.asarray(groups, np.int64)
+                if len(groups) == 0:
+                    raise ValueError("epoch record with no groups")
+                if int(start) != end:
+                    raise ValueError(
+                        f"epoch records must abut: expected start {end}, "
+                        f"got {start}")
+                cleaned.append((end, groups))
+                end += self._bpe(groups)
+            self._epochs = cleaned
+
 
 def holdout_split(n_groups: int, frac: float, seed: int = 0):
     """Deterministic ``(train, holdout)`` group split — two sorted, disjoint

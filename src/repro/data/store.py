@@ -46,6 +46,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.testing import faults
+
 from .pipeline import MinibatchSampler, SyntheticCorpus
 
 _MANIFEST = "manifest.json"
@@ -165,8 +167,10 @@ class ShardedCorpusWriter:
         done_docs = (self._shards[-1]["doc_end"] if self._shards else 0)
         tok_start = (self._shards[-1]["token_end"] if self._shards else 0)
         fname = f"shard-{len(self._shards):05d}.npy"
+        faults.trip("store.flush.pre_shard")
         np.save(os.path.join(self.path, fname),
                 np.ascontiguousarray(shard))
+        faults.trip("store.flush.post_shard")
         self._shards.append({
             "path": fname,
             "doc_start": done_docs, "doc_end": done_docs + n_docs,
@@ -205,19 +209,28 @@ class ShardedCorpusWriter:
             vocab = int(self._vocab)
         self._commits += 1
         lengths = np.concatenate(self._done_lengths)
+        faults.trip("store.commit.pre_lengths")
         ltmp = os.path.join(self.path, _LENGTHS + ".tmp")
         with open(ltmp, "wb") as fh:
             np.save(fh, lengths)
         os.replace(ltmp, os.path.join(self.path, _LENGTHS))
+        faults.trip("store.commit.pre_manifest")
         manifest = {"format": _FORMAT, "version": _VERSION,
                     "commit": self._commits,
                     "n_docs": self._n_docs, "n_tokens": self._n_tokens,
                     "vocab": vocab, "dtype": "int32",
-                    "shards": self._shards}
+                    "shards": self._shards,
+                    # writer-recovery context (readers ignore it): the raw
+                    # token ceiling and construction knobs reopen() needs to
+                    # continue appending faithfully after a crash
+                    "writer": {"shard_tokens": self.shard_tokens,
+                               "vocab": self._vocab,
+                               "token_max": self._token_max}}
         mtmp = os.path.join(self.path, _MANIFEST + ".tmp")
         with open(mtmp, "w") as fh:
             json.dump(manifest, fh, indent=1)
         os.replace(mtmp, os.path.join(self.path, _MANIFEST))
+        faults.trip("store.commit.post_manifest")
         return ShardedCorpus.open(self.path)
 
     def close(self) -> "ShardedCorpus":
@@ -227,6 +240,96 @@ class ShardedCorpusWriter:
         corpus = self.commit()
         self._closed = True
         return corpus
+
+    @classmethod
+    def reopen(cls, path: str, shard_tokens: Optional[int] = None,
+               vocab: Optional[int] = None) -> "ShardedCorpusWriter":
+        """Resume appending to an existing store — including one whose
+        writer crashed mid-commit.
+
+        The manifest is the commit record, so recovery adopts it as truth:
+        every manifest-listed shard is kept (and header-checked), while any
+        *orphan* state a crash left behind is removed — shard files past
+        the manifest's count (flushed by an uncommitted ``add_docs`` or an
+        aborted commit; never reader-visible, so deleting them cannot
+        violate the append-only invariant), torn partial ``*.tmp`` files,
+        and the over-long ``lengths.npy`` tail written when a crash landed
+        between the lengths replace and the manifest replace (readers
+        already ignore it by the prefix rule; the next commit rewrites it).
+        Counters (doc/token totals, commit number, token ceiling) restore
+        from the manifest's ``writer`` record, so later commits continue
+        the sequence exactly.
+
+        Documents added after the last successful :meth:`commit` were never
+        durable and are NOT recovered — the ingestion caller re-adds them
+        (at-least-once delivery is the caller's contract).  On a directory
+        with no manifest at all, stray files are cleared and a fresh writer
+        is returned.  ``shard_tokens`` / ``vocab`` default to the crashed
+        writer's own settings.
+        """
+        path = str(path)
+        mf = os.path.join(path, _MANIFEST)
+        manifest = None
+        if os.path.exists(mf):
+            with open(mf) as fh:
+                manifest = json.load(fh)
+            if manifest.get("format") != _FORMAT:
+                raise ValueError(f"{mf}: not a {_FORMAT} manifest")
+        winfo = (manifest or {}).get("writer") or {}
+        if shard_tokens is None:
+            shard_tokens = int(winfo.get("shard_tokens") or (1 << 22))
+        if vocab is None:
+            vocab = winfo.get("vocab")
+        w = cls(path, shard_tokens=shard_tokens, vocab=vocab)
+
+        n_committed = len(manifest["shards"]) if manifest else 0
+        committed = {s["path"] for s in manifest["shards"]} if manifest else set()
+        for name in sorted(os.listdir(path)):
+            full = os.path.join(path, name)
+            if name.endswith(".tmp") or ".tmp" in name:
+                os.remove(full)
+            elif (name.startswith("shard-") and name.endswith(".npy")
+                    and name not in committed):
+                os.remove(full)        # orphan: flushed but never committed
+
+        if manifest is None:
+            return w
+
+        lengths = np.load(os.path.join(path, _LENGTHS))
+        n_docs = int(manifest["n_docs"])
+        if len(lengths) < n_docs:
+            raise ValueError(
+                f"{path}: lengths file has {len(lengths)} docs but the "
+                f"manifest commits {n_docs} — the store is damaged beyond "
+                f"the commit protocol's crash states")
+        lengths = np.asarray(lengths[:n_docs], np.int64)
+        if int(lengths.sum()) != int(manifest["n_tokens"]):
+            raise ValueError(
+                f"{path}: committed lengths sum {int(lengths.sum())} != "
+                f"manifest n_tokens {manifest['n_tokens']}")
+        legacy_max = -1
+        for s in manifest["shards"]:
+            full = os.path.join(path, s["path"])
+            if not os.path.exists(full):
+                raise ValueError(f"{path}: committed shard {s['path']} is "
+                                 f"missing")
+            got = np.load(full, mmap_mode="r").shape[0]
+            want = int(s["token_end"]) - int(s["token_start"])
+            if got != want:
+                raise ValueError(
+                    f"{path}: committed shard {s['path']} holds {got} "
+                    f"tokens, manifest says {want}")
+            if want:
+                legacy_max = max(legacy_max, int(s["token_max"]))
+        w._shards = list(manifest["shards"])
+        w._done_lengths = [lengths] if n_docs else []
+        w._n_docs = n_docs
+        w._n_tokens = int(manifest["n_tokens"])
+        w._commits = int(manifest["commit"])
+        # pre-"writer"-record manifests: derive the ceiling from the shards
+        w._token_max = int(winfo["token_max"]) if "token_max" in winfo \
+            else legacy_max
+        return w
 
 
 def write_sharded_corpus(corpus, path: str, shard_tokens: int = 1 << 22,
@@ -799,6 +902,24 @@ class ShardedMinibatchSampler:
         """Sorted ``(<=batch_size,) int64`` doc ids of schedule slot
         ``step`` — bitwise the resident :class:`MinibatchSampler` order."""
         return self._inner.batch_at(step)
+
+    def epoch_snapshots(self):
+        """Resumable sampler cursor: the growing sampler's per-epoch group
+        snapshots (``[]`` in fixed mode, where ``batch_at`` is already pure
+        in ``(seed, step)`` and needs no cursor)."""
+        if not self.grow:
+            return []
+        return self._inner.epoch_snapshots()
+
+    def restore_epochs(self, records) -> None:
+        """Reseat the growing schedule from a checkpointed cursor (see
+        :meth:`~repro.data.pipeline.GrowingMinibatchSampler.restore_epochs`).
+        No-op for empty records; invalid in fixed mode."""
+        if not records:
+            return
+        if not self.grow:
+            raise ValueError("epoch records only apply to grow=True mode")
+        self._inner.restore_epochs(records)
 
     def _load_at(self, step: int):
         batch = self.loader(self.batch_at(step))

@@ -63,3 +63,35 @@ def remesh_and_resume(cfg, run: RunConfig, checkpoint_dir: str,
     mesh = factor_mesh(n, want_model)
     return train(cfg, run, steps, mesh=mesh, checkpoint_dir=checkpoint_dir,
                  checkpoint_every=max(steps // 2, 1))
+
+
+def remesh_and_resume_svi(model, engine_cfg, checkpoint_dir: str,
+                          n_devices: int | None = None, want_model: int = 0):
+    """Statistical-engine counterpart of :func:`remesh_and_resume`: factor
+    a mesh for the surviving device count, wrap its data axis in an
+    inferspark :class:`~repro.core.partition.ShardingPlan`, and continue
+    the SVI fit from ``checkpoint_dir``'s newest valid
+    :class:`~repro.checkpoint.TrainSession`.
+
+    ``engine_cfg`` is anything :func:`~repro.core.engine.make_engine`
+    accepts (its ``steps`` is the *total* budget — only the remainder past
+    the session's step runs).  Unlike the LM path there is no
+    batch-divisibility constraint: SVI LPT-packs each minibatch across the
+    data shards by token mass.  The session fingerprint deliberately
+    excludes the sharding plan, so resuming on a *different* device count
+    is allowed — the schedule (sampler, Robbins-Monro position, holdout)
+    continues exactly, but cross-shard reduction order changes, so the
+    continuation is deterministic-going-forward rather than bitwise to the
+    old mesh.  At an unchanged device count it is bitwise (the crash-test
+    suite's contract).
+    """
+    from repro.core.engine import make_engine
+    from repro.core.partition import ShardingPlan
+
+    n = n_devices or len(jax.devices())
+    data, model_ax = factor_counts(n, want_model)
+    mesh = make_mesh((data, model_ax), ("data", "model"))
+    plan = ShardingPlan(mesh, ("data",), "inferspark")
+    eng = make_engine(engine_cfg, sharding=plan,
+                      checkpoint_dir=checkpoint_dir, resume=True)
+    return eng.fit(model)

@@ -112,11 +112,12 @@ class Posterior:
     def save(self, directory: str) -> str:
         """Write the artifact (atomic: the checkpoint commit protocol).
 
-        Layout: ``<dir>/step_0000000000/{leaves.npz, manifest.json}`` (the
-        concentration tree, via ``checkpoint.store.save``) plus
-        ``<dir>/posterior.json`` (format version + provenance), written
-        last so a directory with a ``posterior.json`` is always complete.
-        """
+        Layout: ``<dir>/step_0000000000.npz`` (the concentration tree as a
+        single self-validating checkpoint file, via
+        ``checkpoint.store.save`` — embedded manifest + per-leaf
+        checksums) plus ``<dir>/posterior.json`` (format version +
+        provenance), written last so a directory with a
+        ``posterior.json`` is always complete."""
         from repro.checkpoint import store
         store.save(directory, _STEP, dict(self.posteriors))
         doc = {"format_version": FORMAT_VERSION,

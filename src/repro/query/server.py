@@ -64,6 +64,7 @@ class _Request:
     lengths: np.ndarray
     future: Future
     t_enqueue: float
+    deadline: float | None = None    # absolute; expired requests fail fast
 
 
 class QueryServer:
@@ -78,18 +79,35 @@ class QueryServer:
     stays O(window); the counters are lifetime totals).
     ``version`` — label of the initial artifact (responses carry the label
     of the artifact that scored them; :meth:`swap` installs new ones).
+    ``admission_timeout_s`` — bound on how long :meth:`submit` waits for
+    queue room before rejecting with ``TimeoutError`` (backpressure with a
+    floor, instead of the old unbounded retry loop that could park a
+    client forever behind a stalled dispatcher).
+    ``default_timeout_s`` — deadline applied to requests submitted without
+    one; ``None`` = no deadline.  An expired request is failed fast by the
+    dispatcher *before* scoring (``stats()["expired"]``) — previously a
+    timed-out ``QueryClient`` left its request queued, and the dispatcher
+    later burned a batch slot scoring it for a dead caller.
     """
 
     def __init__(self, foldin: FoldIn, max_batch_docs: int = 64,
                  max_delay_s: float = 0.002, max_queue: int = 1024,
-                 stats_window: int = 4096, version: str = "v0"):
+                 stats_window: int = 4096, version: str = "v0",
+                 admission_timeout_s: float = 5.0,
+                 default_timeout_s: float | None = None):
         if max_batch_docs <= 0:
             raise ValueError("max_batch_docs must be positive")
+        if admission_timeout_s <= 0:
+            raise ValueError("admission_timeout_s must be positive")
         self._foldin = foldin
         self._version = str(version)
         self._swaps = 0
         self.max_batch_docs = max_batch_docs
         self.max_delay_s = max_delay_s
+        self.admission_timeout_s = admission_timeout_s
+        self.default_timeout_s = default_timeout_s
+        self._n_expired = 0
+        self._n_rejected = 0
         self._q: "queue.Queue[_Request]" = queue.Queue(maxsize=max_queue)
         self._stop = threading.Event()
         self._stopped = False           # guarded by _lock, final
@@ -182,11 +200,18 @@ class QueryServer:
 
     # -- client edge -------------------------------------------------------
 
-    def submit(self, values, segment_ids=None, lengths=None) -> Future:
+    def submit(self, values, segment_ids=None, lengths=None,
+               timeout_s: float | None = None) -> Future:
         """Enqueue one request (one or more documents); returns a
         :class:`~concurrent.futures.Future` of :class:`QueryResponse`.
         Raises ``RuntimeError`` once the server is stopped (fail fast —
-        a request accepted after :meth:`stop` could never resolve)."""
+        a request accepted after :meth:`stop` could never resolve).
+
+        ``timeout_s`` (default ``default_timeout_s``) sets the request's
+        deadline: if the dispatcher reaches it after the deadline the
+        future fails with ``TimeoutError`` instead of being scored for a
+        caller that has given up.  A full queue blocks at most
+        ``admission_timeout_s`` before rejecting with ``TimeoutError``."""
         values = np.asarray(values, np.int32).ravel()
         if lengths is None:
             if segment_ids is None:
@@ -213,11 +238,17 @@ class QueryServer:
             raise ValueError(f"lengths sum to {int(lengths.sum())}, "
                              f"got {len(values)} values")
         fut: Future = Future()
-        req = _Request(values, lengths, fut, time.time())
+        now = time.time()
+        t = timeout_s if timeout_s is not None else self.default_timeout_s
+        req = _Request(values, lengths, fut, now,
+                       deadline=(now + t) if t is not None else None)
         # enqueue under the lifecycle lock: once stop() has set _stopped,
         # nothing can enter the queue, so its single drain is complete and
         # no future is ever stranded.  Backpressure (queue full) is a
-        # retry loop so the lock is never held while blocked.
+        # retry loop so the lock is never held while blocked — bounded by
+        # admission_timeout_s so a stalled dispatcher can't park a client
+        # forever.
+        admit_by = now + self.admission_timeout_s
         while True:
             with self._lock:
                 if self._stopped:
@@ -228,7 +259,12 @@ class QueryServer:
                     self._q.put_nowait(req)
                     return fut
                 except queue.Full:
-                    pass
+                    if time.time() >= admit_by:
+                        self._n_rejected += 1
+                        raise TimeoutError(
+                            f"query queue full for {self.admission_timeout_s}"
+                            f"s ({self._q.maxsize} undispatched requests); "
+                            f"rejecting instead of blocking forever")
             time.sleep(5e-4)
 
     # -- dispatch ----------------------------------------------------------
@@ -252,6 +288,23 @@ class QueryServer:
                     break
                 batch.append(req)
                 docs += len(req.lengths)
+            # fail-fast expired requests before burning a batch slot on a
+            # caller whose QueryClient already raised and walked away
+            now = time.time()
+            live, expired = [], []
+            for r in batch:
+                (expired if r.deadline is not None and now > r.deadline
+                 else live).append(r)
+            if expired:
+                batch = live
+                for req in expired:
+                    req.future.set_exception(TimeoutError(
+                        f"request expired {now - req.deadline:.3f}s past its "
+                        f"deadline before dispatch"))
+                with self._lock:
+                    self._n_expired += len(expired)
+                if not batch:
+                    continue
             # the swap capture point: one (scorer, version) read per batch,
             # after batch formation and before dispatch — a swap() lands
             # between batches, never inside one
@@ -325,6 +378,8 @@ class QueryServer:
                 "artifact_version": self._version,
                 "swaps": self._swaps,
                 "queue_depth": self._q.qsize(),
+                "expired": self._n_expired,
+                "rejected": self._n_rejected,
             }
 
 
@@ -337,9 +392,11 @@ class QueryClient:
 
     def score(self, values, segment_ids=None, lengths=None) -> QueryResponse:
         """Score one request's documents; blocks until the batched
-        dispatch resolves it."""
+        dispatch resolves it.  The client's ``timeout_s`` travels with the
+        request as its deadline, so a request this client gives up on is
+        failed fast by the dispatcher instead of being scored for nobody."""
         fut = self.server.submit(values, segment_ids=segment_ids,
-                                 lengths=lengths)
+                                 lengths=lengths, timeout_s=self.timeout_s)
         return fut.result(timeout=self.timeout_s)
 
     def topics(self, name: str, k: int = 10):

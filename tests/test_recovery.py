@@ -1,0 +1,560 @@
+"""Crash-safety suite: the deterministic fault harness, writer crash
+recovery at every commit-protocol point (subprocess SIGKILL), and the
+train -> kill -> resume bitwise-identity contract for resident and growing
+corpora — plus the engine/elastic wiring and the query server's
+deadline/admission fixes.  See ``docs/fault_tolerance.md``."""
+
+import dataclasses
+import json
+import os
+import signal
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_session_step
+from repro.core import models
+from repro.core.svi import SVI, SVIConfig
+from repro.data import ShardedCorpus, ShardedCorpusWriter
+from repro.query import QueryClient, QueryServer
+from repro.testing import faults
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    yield
+    faults.reset()
+
+
+def _lda():
+    return models.make("lda", alpha=0.1, beta=0.05, K=3, V=30)
+
+
+# ---------------------------------------------------------------------------
+# the fault harness itself
+# ---------------------------------------------------------------------------
+
+def test_fault_fires_on_nth_hit_then_stays_fired():
+    with faults.inject("t.point", nth=3):
+        faults.trip("t.point")
+        faults.trip("t.point")
+        with pytest.raises(faults.InjectedCrash, match="t.point"):
+            faults.trip("t.point")
+        faults.trip("t.point")               # fires exactly once
+    faults.trip("t.point")                   # disarmed on context exit
+
+
+def test_env_spec_parsing():
+    fs = faults._parse_env("a=kill@2, b, c=sleep:0.25")
+    assert (fs[0].point, fs[0].action, fs[0].nth) == ("a", "kill", 2)
+    assert (fs[1].point, fs[1].action, fs[1].nth) == ("b", "raise", 1)
+    assert fs[2].action == "sleep" and fs[2].sleep_s == 0.25
+    with pytest.raises(ValueError, match="unknown fault action"):
+        faults.Fault("p", "bogus")
+    with pytest.raises(ValueError, match="nth"):
+        faults.Fault("p", nth=0)
+    with pytest.raises(ValueError, match="fn"):
+        faults.Fault("p", "call")
+
+
+def test_env_armed_child_dies_at_point():
+    code = ("from repro.testing import faults\n"
+            "faults.trip('x.y')\n"
+            "print('SURVIVED')\n")
+    r = faults.run_child(code, faults="x.y=exit")
+    assert r.returncode == faults.EXIT_CODE and "SURVIVED" not in r.stdout
+    r = faults.run_child(code, faults="x.y=kill")
+    assert r.returncode == -signal.SIGKILL
+    r = faults.run_child(code)               # disarmed: runs through
+    assert r.returncode == 0 and "SURVIVED" in r.stdout
+
+
+def test_corruption_helpers(tmp_path):
+    p = str(tmp_path / "f.bin")
+    with open(p, "wb") as fh:
+        fh.write(bytes(range(100)))
+    faults.truncate_file(p, 0.5)
+    assert os.path.getsize(p) == 50
+    faults.truncate_file(p, 10)
+    assert os.path.getsize(p) == 10
+    faults.flip_byte(p, 3)
+    assert open(p, "rb").read()[3] == 3 ^ 0xFF
+    faults.flip_byte(p, -1)
+    assert open(p, "rb").read()[9] == 9 ^ 0xFF
+
+
+# ---------------------------------------------------------------------------
+# writer crash recovery: subprocess SIGKILL at every commit point
+# ---------------------------------------------------------------------------
+
+def _writer_data():
+    """The deterministic corpus both the parent and child generate."""
+    rng = np.random.default_rng(7)
+    lengths = rng.integers(3, 9, 40)
+    tokens = rng.integers(0, 30, int(lengths.sum())).astype(np.int32)
+    return tokens, np.asarray(lengths, np.int64)
+
+
+_WRITER_CHILD = """
+import numpy as np
+from repro.data.store import ShardedCorpusWriter
+rng = np.random.default_rng(7)
+lengths = rng.integers(3, 9, 40)
+tokens = rng.integers(0, 30, int(lengths.sum())).astype(np.int32)
+offs = np.concatenate([[0], np.cumsum(lengths)])
+w = ShardedCorpusWriter({path!r}, shard_tokens=64, vocab=30)
+w.add_docs(tokens[:offs[20]], lengths[:20])
+w.commit()
+print('COMMIT1', flush=True)
+w.add_docs(tokens[offs[20]:], lengths[20:])
+w.commit()
+print('COMMIT2', flush=True)
+"""
+
+
+@pytest.mark.parametrize("point,docs_after_crash", [
+    ("store.commit.pre_lengths", 20),    # nothing of commit 2 landed
+    ("store.commit.pre_manifest", 20),   # lengths replaced, manifest not:
+                                         # the benign-prefix crash state
+    ("store.commit.post_manifest", 40),  # commit 2 fully durable
+])
+def test_commit_crash_point_leaves_consistent_prefix(tmp_path, point,
+                                                     docs_after_crash):
+    """SIGKILL a real writer process at each commit-protocol line (env-armed
+    fault, second commit), then: the store opens at the last committed
+    prefix, ``reopen()`` adopts it, re-ingesting the lost tail reproduces
+    the uninterrupted corpus bitwise, and a live reader rides the recovery
+    commit via ``refresh()``."""
+    path = str(tmp_path / "c")
+    r = faults.run_child(_WRITER_CHILD.format(path=path),
+                         faults=f"{point}=kill@2")
+    assert r.returncode == -signal.SIGKILL, r.stderr
+    assert "COMMIT1" in r.stdout and "COMMIT2" not in r.stdout
+
+    tokens, lengths = _writer_data()
+    offs = np.concatenate([[0], np.cumsum(lengths)])
+    sc = ShardedCorpus.open(path)
+    assert sc.n_docs == docs_after_crash
+    np.testing.assert_array_equal(sc.resident()["tokens"],
+                                  tokens[:offs[docs_after_crash]])
+
+    w = ShardedCorpusWriter.reopen(path)
+    if docs_after_crash < 40:                # re-add the undurable tail
+        w.add_docs(tokens[offs[docs_after_crash]:],
+                   lengths[docs_after_crash:])
+    full = w.close()
+    assert full.n_docs == 40
+    np.testing.assert_array_equal(full.resident()["tokens"], tokens)
+    np.testing.assert_array_equal(full.lengths, lengths)
+    assert sc.refresh() is (docs_after_crash < 40)   # live reader catches up
+    assert sc.n_docs == 40
+
+
+def test_reopen_cleans_torn_uncommitted_shard(tmp_path):
+    """A crash mid-shard-flush leaves a torn, never-committed shard file on
+    disk.  It was never reader-visible (the manifest is the commit record),
+    and ``reopen()`` removes it before continuing."""
+    path = str(tmp_path / "c")
+    tokens, lengths = _writer_data()
+    offs = np.concatenate([[0], np.cumsum(lengths)])
+    w = ShardedCorpusWriter(path, shard_tokens=64, vocab=30)
+    w.add_docs(tokens[:offs[20]], lengths[:20])
+    w.commit()
+    with open(os.path.join(path, "manifest.json")) as fh:
+        committed = {s["path"] for s in json.load(fh)["shards"]}
+
+    def tear():
+        orphans = sorted(n for n in os.listdir(path)
+                         if n.startswith("shard-") and n.endswith(".npy")
+                         and n not in committed)
+        faults.truncate_file(os.path.join(path, orphans[-1]), 0.5)
+        raise faults.InjectedCrash("torn mid-flush")
+
+    with faults.inject("store.flush.post_shard", action="call", fn=tear):
+        with pytest.raises(faults.InjectedCrash):
+            w.add_docs(tokens[offs[20]:], lengths[20:])
+            w.commit()
+    # the writer object is dead; readers still see the committed prefix
+    assert ShardedCorpus.open(path).n_docs == 20
+
+    w2 = ShardedCorpusWriter.reopen(path)
+    leftover = [n for n in os.listdir(path)
+                if n.startswith("shard-") and n not in committed]
+    assert not leftover                      # torn orphan swept
+    w2.add_docs(tokens[offs[20]:], lengths[20:])
+    full = w2.close()
+    np.testing.assert_array_equal(full.resident()["tokens"], tokens)
+    np.testing.assert_array_equal(full.lengths, lengths)
+
+
+def test_reopen_continues_shard_numbering_and_counters(tmp_path):
+    """Recovery must continue the sequence exactly: shard names, commit
+    numbers, and the vocab ceiling all pick up where the manifest left
+    off (a restarted ingestion job is indistinguishable on disk from one
+    that never crashed)."""
+    path = str(tmp_path / "c")
+    tokens, lengths = _writer_data()
+    offs = np.concatenate([[0], np.cumsum(lengths)])
+    w = ShardedCorpusWriter(path, shard_tokens=64, vocab=30)
+    w.add_docs(tokens[:offs[20]], lengths[:20])
+    sc = w.commit()
+    n_shards_before = len(sc.manifest["shards"])
+
+    w2 = ShardedCorpusWriter.reopen(path)
+    w2.add_docs(tokens[offs[20]:], lengths[20:])
+    full = w2.close()
+    assert full.manifest["commit"] == 2
+    names = [s["path"] for s in full.manifest["shards"]]
+    assert names == sorted(set(names))       # no collisions, no gaps
+    assert len(names) > n_shards_before
+    # uninterrupted reference: bitwise-identical corpus content
+    ref_path = str(tmp_path / "ref")
+    ShardedCorpusWriter(ref_path, shard_tokens=64, vocab=30) \
+        .add_docs(tokens, lengths).close()
+    np.testing.assert_array_equal(
+        full.resident()["tokens"],
+        ShardedCorpus.open(ref_path).resident()["tokens"])
+
+
+def test_reopen_without_manifest_clears_strays(tmp_path):
+    """A crash before the *first* commit leaves only orphan state; reopen
+    returns a fresh writer over a clean directory."""
+    path = str(tmp_path / "c")
+    os.makedirs(path)
+    np.save(os.path.join(path, "shard-00000.npy"),
+            np.arange(5, dtype=np.int32))
+    with open(os.path.join(path, "lengths.npy.tmp"), "wb") as fh:
+        fh.write(b"torn")
+    w = ShardedCorpusWriter.reopen(path, shard_tokens=64, vocab=30)
+    assert os.listdir(path) == []
+    tokens, lengths = _writer_data()
+    full = w.add_docs(tokens, lengths).close()
+    assert full.n_docs == 40
+
+
+# ---------------------------------------------------------------------------
+# SVI sessions: train -> crash -> resume is bitwise (resident corpus)
+# ---------------------------------------------------------------------------
+
+def _resident_cfg(**kw):
+    return SVIConfig(batch_size=12, holdout_frac=0.1, holdout_every=3,
+                     seed=0, **kw)
+
+
+def _assert_states_equal(state, ref_state):
+    assert int(state.step) == int(ref_state.step)
+    for n, v in ref_state.posteriors.items():
+        np.testing.assert_array_equal(np.asarray(state.posteriors[n]),
+                                      np.asarray(v), err_msg=n)
+
+
+def test_svi_crash_resume_is_bitwise(lda_program, tmp_path):
+    d = str(tmp_path / "ck")
+    ref_state, ref_hist = SVI(lda_program, _resident_cfg()).fit(steps=10)
+
+    crash = SVI(lda_program, _resident_cfg())
+    with faults.inject("svi.step", nth=7):   # dies entering step t=6
+        with pytest.raises(faults.InjectedCrash):
+            crash.fit(steps=10, checkpoint_dir=d, checkpoint_every=2)
+    assert latest_session_step(d) == 6
+
+    resumed = SVI(lda_program, _resident_cfg())
+    state, hist = resumed.fit(steps=4, checkpoint_dir=d, resume_from=True)
+    _assert_states_equal(state, ref_state)
+    assert hist["elbo"] == ref_hist["elbo"]          # full trace carries over
+    assert hist["heldout"] == ref_hist["heldout"]
+
+
+def test_resume_falls_back_past_corrupt_newest_session(lda_program,
+                                                       tmp_path):
+    """Damaging the newest session must not kill the job: resume warns with
+    the exact damage, falls back to the previous valid session, and the
+    re-run continuation still lands bitwise on the reference."""
+    d = str(tmp_path / "ck")
+    ref_state, _ = SVI(lda_program, _resident_cfg()).fit(steps=10)
+    crash = SVI(lda_program, _resident_cfg())
+    with faults.inject("svi.step", nth=7):
+        with pytest.raises(faults.InjectedCrash):
+            crash.fit(steps=10, checkpoint_dir=d, checkpoint_every=2)
+    newest = os.path.join(d, "step_%010d.npz" % 6)
+    faults.flip_byte(newest, os.path.getsize(newest) // 2)
+
+    resumed = SVI(lda_program, _resident_cfg())
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        state, _ = resumed.fit(steps=6, checkpoint_dir=d, resume_from=True)
+    _assert_states_equal(state, ref_state)           # resumed from step 4
+
+
+def test_resume_refuses_mismatched_fingerprint(lda_program, tmp_path):
+    d = str(tmp_path / "ck")
+    SVI(lda_program, _resident_cfg()).fit(steps=4, checkpoint_dir=d,
+                                          checkpoint_every=2)
+    other = SVI(lda_program,
+                dataclasses.replace(_resident_cfg(), seed=1, kappa=0.9))
+    with pytest.raises(ValueError, match="seed.*|kappa.*"):
+        other.fit(steps=4, checkpoint_dir=d, resume_from=True)
+
+
+def test_resume_argument_contract(lda_program, tmp_path):
+    svi = SVI(lda_program, _resident_cfg())
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        svi.fit(steps=1, resume_from=True)
+    with pytest.raises(FileNotFoundError):
+        svi.fit(steps=1, resume_from=str(tmp_path / "nowhere"))
+    d = str(tmp_path / "ck")
+    # resume_from=True on an empty directory is a cold start (the
+    # always-on loop uses one code path for first launch and restarts)
+    state, _ = svi.fit(steps=2, checkpoint_dir=d, resume_from=True)
+    assert int(state.step) == 2
+    with pytest.raises(ValueError, match="not both"):
+        svi.fit(steps=1, state=state, checkpoint_dir=d, resume_from=True)
+
+
+def test_subprocess_sigkill_resume_matches_uninterrupted(lda_program,
+                                                         tmp_path):
+    """The real thing: a separate training process is SIGKILLed mid-run
+    (no unwinding, no flushes), and a fresh process resumes from its
+    session checkpoints to the same final state as an uninterrupted run."""
+    d = str(tmp_path / "ck")
+    child = f"""
+import numpy as np
+from repro.data import SyntheticCorpus
+from repro.core import models
+from repro.core.svi import SVI, SVIConfig
+c = SyntheticCorpus(n_docs=50, vocab=30, n_topics=3, mean_len=60,
+                    seed=0).generate()
+m = models.make("lda", alpha=0.1, beta=0.05, K=3, V=30)
+m["x"].observe(c["tokens"], segment_ids=c["doc_ids"])
+svi = SVI(m.compile(), SVIConfig(batch_size=12, holdout_frac=0.1,
+                                 holdout_every=3, seed=0))
+svi.fit(steps=10, checkpoint_dir={d!r}, checkpoint_every=2,
+        callback=lambda t, e: print(f"STEP {{t}}", flush=True))
+print("DONE", flush=True)
+"""
+    proc = faults.spawn_child(child)
+    try:
+        assert faults.wait_for_marker(proc, "STEP 5", timeout=300)
+    finally:
+        rc = faults.sigkill(proc)
+    assert rc == -signal.SIGKILL
+    step = latest_session_step(d)
+    assert step is not None and 2 <= step <= 8   # async saves at 2/4/6(/8)
+
+    ref_state, ref_hist = SVI(lda_program, _resident_cfg()).fit(steps=10)
+    resumed = SVI(lda_program, _resident_cfg())
+    state, hist = resumed.fit(steps=10 - step, checkpoint_dir=d,
+                              resume_from=True)
+    _assert_states_equal(state, ref_state)
+    assert hist["elbo"] == ref_hist["elbo"]
+
+
+# ---------------------------------------------------------------------------
+# SVI sessions: growing corpus (epoch snapshots + holdout carry over)
+# ---------------------------------------------------------------------------
+
+def _grow_cfg():
+    # prefetch off: epoch snapshots land at step granularity, so the
+    # crash run and the uninterrupted reference see appends at identical
+    # boundaries (with prefetch, snapshot timing is benign but not bitwise)
+    return SVIConfig(batch_size=10, holdout_frac=0.1, holdout_every=4,
+                     pad_multiple=64, seed=0, growing=True,
+                     capacity_docs=64, prefetch=False)
+
+
+def _offsets(corpus):
+    return np.concatenate([[0], np.cumsum(corpus["lengths"])])
+
+
+def _write_prefix(corpus, path, n_docs):
+    offs = _offsets(corpus)
+    w = ShardedCorpusWriter(str(path), shard_tokens=500, vocab=30)
+    w.add_docs(corpus["tokens"][:offs[n_docs]], corpus["lengths"][:n_docs])
+    return w, w.commit()
+
+
+def _append_rest(w, corpus, n_done):
+    offs = _offsets(corpus)
+    w.add_docs(corpus["tokens"][offs[n_done]:], corpus["lengths"][n_done:])
+    w.close()
+
+
+def test_growing_crash_resume_is_bitwise(small_corpus, tmp_path):
+    """fit -> append -> fit with a kill inside the second fit: the resumed
+    run (a fresh process stand-in: new SVI over the reopened, already-grown
+    corpus) replays the saved epoch snapshots and held-out split, so its
+    remaining schedule — and the final state — is bitwise the reference's,
+    even though the split and snapshots are underivable from the grown
+    corpus."""
+    # uninterrupted reference
+    w, sc = _write_prefix(small_corpus, tmp_path / "ref", 30)
+    svi = SVI(_lda(), _grow_cfg(), corpus=sc)
+    state, h1 = svi.fit(steps=6)
+    _append_rest(w, small_corpus, 30)
+    state, h2 = svi.fit(steps=9, state=state)
+    svi.close()
+    ref_state = state
+    assert len(h1["elbo"]) == 6 and len(h2["elbo"]) == 9
+
+    # crashed run over an identical corpus copy
+    w2, sc2 = _write_prefix(small_corpus, tmp_path / "crash", 30)
+    d = str(tmp_path / "ck")
+    svi1 = SVI(_lda(), _grow_cfg(), corpus=sc2)
+    state1, _ = svi1.fit(steps=6, checkpoint_dir=d, checkpoint_every=2)
+    _append_rest(w2, small_corpus, 30)
+    with faults.inject("svi.step", nth=4):   # dies entering step t=9
+        with pytest.raises(faults.InjectedCrash):
+            svi1.fit(steps=9, state=state1, checkpoint_dir=d,
+                     checkpoint_every=2)
+    svi1.close()
+    assert latest_session_step(d) == 8
+
+    svi2 = SVI(_lda(), _grow_cfg(),
+               corpus=ShardedCorpus.open(str(tmp_path / "crash")))
+    state2, hist = svi2.fit(steps=7, checkpoint_dir=d, resume_from=True)
+    svi2.close()
+    _assert_states_equal(state2, ref_state)
+    # history is per fit-call: the session rode the *second* fit, so the
+    # resumed trace equals the reference's second-fit trace
+    assert hist["elbo"] == h2["elbo"]
+    assert hist["heldout"] == h2["heldout"]
+
+
+def test_growing_resume_refuses_shrunk_corpus(small_corpus, tmp_path):
+    w, sc = _write_prefix(small_corpus, tmp_path / "a", 30)
+    d = str(tmp_path / "ck")
+    svi = SVI(_lda(), _grow_cfg(), corpus=sc)
+    svi.fit(steps=3, checkpoint_dir=d, checkpoint_every=1)
+    svi.close()
+    w.close()
+    # "resume" against a different, smaller corpus directory
+    _, small = _write_prefix(small_corpus, tmp_path / "b", 20)
+    svi2 = SVI(_lda(), _grow_cfg(), corpus=small)
+    with pytest.raises(ValueError, match="append-only|shrink|20"):
+        svi2.fit(steps=3, checkpoint_dir=d, resume_from=True)
+    svi2.close()
+
+
+# ---------------------------------------------------------------------------
+# engine + elastic wiring
+# ---------------------------------------------------------------------------
+
+def test_engine_resume_budget_semantics(small_corpus, tmp_path):
+    """EngineConfig(resume=True): ``steps`` is the total budget — a relaunch
+    with the same config runs only the remainder and lands on the same
+    result as one uninterrupted run."""
+    from repro.core import make_engine
+    m = _lda()
+    m["x"].observe(small_corpus["tokens"],
+                   segment_ids=small_corpus["doc_ids"])
+    ref = make_engine("svi", steps=10, batch_size=16, seed=0).fit(m)
+    d = str(tmp_path / "ck")
+    r1 = make_engine("svi", steps=4, batch_size=16, seed=0,
+                     checkpoint_dir=d, checkpoint_every=2).fit(m)
+    assert r1.meta["resumed_from_step"] is None
+    r2 = make_engine("svi", steps=10, batch_size=16, seed=0,
+                     checkpoint_dir=d, checkpoint_every=2,
+                     resume=True).fit(m)
+    assert r2.meta["resumed_from_step"] == 4
+    assert r2.elbo_trace == ref.elbo_trace
+    for n in ref.posteriors:
+        np.testing.assert_array_equal(r2.posteriors[n], ref.posteriors[n])
+    # a third relaunch has nothing left to run and is a cheap no-op
+    r3 = make_engine("svi", steps=10, batch_size=16, seed=0,
+                     checkpoint_dir=d, checkpoint_every=2,
+                     resume=True).fit(m)
+    assert r3.meta["resumed_from_step"] == 10
+    assert r3.elbo_trace == ref.elbo_trace
+
+
+def test_remesh_and_resume_svi_smoke(small_corpus, tmp_path):
+    """The elastic entry point continues an engine fit from its session
+    checkpoints on a freshly factored mesh (single device here)."""
+    from repro.core import make_engine
+    from repro.core.engine import EngineConfig
+    from repro.launch.elastic import remesh_and_resume_svi
+    m = _lda()
+    m["x"].observe(small_corpus["tokens"],
+                   segment_ids=small_corpus["doc_ids"])
+    d = str(tmp_path / "ck")
+    cfg = EngineConfig(backend="svi", steps=8, batch_size=16, seed=0,
+                       checkpoint_dir=d, checkpoint_every=2)
+    make_engine(cfg, steps=4).fit(m)
+    r = remesh_and_resume_svi(m, cfg, d)
+    assert r.meta["resumed_from_step"] == 4
+    assert len(r.elbo_trace) == 8
+    assert np.isfinite(r.elbo_trace).all()
+
+
+# ---------------------------------------------------------------------------
+# query server: request deadlines + bounded admission
+# ---------------------------------------------------------------------------
+
+class _StallScorer:
+    """Duck-typed FoldIn stand-in whose score() stalls for ``delay`` —
+    isolates dispatcher timing from real fold-in compute."""
+    compiled_buckets = 0
+
+    def __init__(self, delay=0.0):
+        self.delay = delay
+
+    def score(self, values, lengths=None):
+        if self.delay:
+            time.sleep(self.delay)
+        lengths = np.asarray(lengths, np.int64)
+        return types.SimpleNamespace(
+            doc_ll=np.zeros(len(lengths)), mixtures={}, mixture_groups={},
+            n_docs=len(lengths), n_tokens=int(lengths.sum()))
+
+
+def test_expired_request_fails_fast_and_is_counted():
+    srv = QueryServer(_StallScorer(delay=0.3), max_batch_docs=1,
+                      max_delay_s=0.0).start()
+    try:
+        f1 = srv.submit(np.array([1, 2, 3], np.int32))
+        time.sleep(0.05)                     # dispatcher is now stalled on f1
+        f2 = srv.submit(np.array([4, 5], np.int32), timeout_s=0.05)
+        assert f1.result(timeout=10).n_docs == 1
+        with pytest.raises(TimeoutError, match="expired"):
+            f2.result(timeout=10)
+        assert srv.stats()["expired"] == 1
+        assert srv.stats()["requests"] == 1  # the expired one never scored
+    finally:
+        srv.stop()
+
+
+def test_admission_wait_is_bounded():
+    # dispatcher never started: the queue cannot drain
+    srv = QueryServer(_StallScorer(), max_queue=1, admission_timeout_s=0.1)
+    srv.submit(np.array([1], np.int32))
+    t0 = time.time()
+    with pytest.raises(TimeoutError, match="queue full"):
+        srv.submit(np.array([2], np.int32))
+    assert 0.05 < time.time() - t0 < 2.0
+    assert srv.stats()["rejected"] == 1
+    srv.stop()                               # drains + fails the queued one
+    with pytest.raises(ValueError, match="admission_timeout_s"):
+        QueryServer(_StallScorer(), admission_timeout_s=0.0)
+
+
+def test_client_timeout_travels_with_the_request():
+    """A QueryClient that gives up used to leave its request queued for the
+    dispatcher to score anyway; now the client timeout rides along as the
+    request deadline and the dispatcher drops it before scoring."""
+    from concurrent.futures import TimeoutError as FuturesTimeout
+    srv = QueryServer(_StallScorer(delay=0.3), max_batch_docs=1,
+                      max_delay_s=0.0).start()
+    try:
+        srv.submit(np.array([1, 2, 3], np.int32))    # occupy the dispatcher
+        client = QueryClient(srv, timeout_s=0.05)
+        with pytest.raises((TimeoutError, FuturesTimeout)):
+            client.score(np.array([4, 5], np.int32))
+        deadline = time.time() + 5
+        while srv.stats()["expired"] < 1 and time.time() < deadline:
+            time.sleep(0.01)
+        assert srv.stats()["expired"] == 1           # dropped, not scored
+        assert srv.stats()["requests"] == 1
+    finally:
+        srv.stop()
