@@ -22,6 +22,10 @@
     bench_recovery   crash-safety cost: checkpoint overhead on the training
                      loop, per-commit ms of a self-validating session save,
                      crash-to-training-again resume latency, writer reopen
+    bench_multihost  multi-host SVI on bench_outofcore's corpus: single vs
+                     2-virtual-host vs real 2-process (gloo) topologies —
+                     us/step + tokens/s scaling and the per-host working
+                     set (owned shards only)
 
 Prints ``name,us_per_call,derived`` CSV.  Select modules with
 ``python -m benchmarks.run [vmp|scaling|partition|kernels] ...``.
@@ -39,14 +43,15 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_outofcore, bench_partition,
-                            bench_query, bench_recovery, bench_scaling,
-                            bench_streaming, bench_svi, bench_vmp)
+    from benchmarks import (bench_kernels, bench_multihost, bench_outofcore,
+                            bench_partition, bench_query, bench_recovery,
+                            bench_scaling, bench_streaming, bench_svi,
+                            bench_vmp)
     mods = {"vmp": bench_vmp, "scaling": bench_scaling,
             "partition": bench_partition, "kernels": bench_kernels,
             "svi": bench_svi, "outofcore": bench_outofcore,
             "query": bench_query, "streaming": bench_streaming,
-            "recovery": bench_recovery}
+            "recovery": bench_recovery, "multihost": bench_multihost}
     args = sys.argv[1:]
     json_mode = "--json" in args
     picks = [a for a in args if a in mods] or list(mods)

@@ -36,3 +36,25 @@ def shard_map(f, mesh, in_specs, out_specs):
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=False)
+
+
+def distributed_initialize(coordinator_address: str, num_processes: int,
+                           process_id: int) -> None:
+    """``jax.distributed.initialize`` with CPU cross-process collectives
+    enabled first.
+
+    On the CPU backend multi-process psums need the gloo collectives
+    implementation; without ``jax_cpu_collectives_implementation = "gloo"``
+    set *before* initialization, every collective (and even the implicit
+    ``assert_equal`` inside multi-process ``device_put``) fails with
+    "Multiprocess computations aren't implemented on the CPU backend".
+    Newer jax versions default to gloo and may drop the option, so a
+    missing config name is ignored.
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:  # pragma: no cover - depends on installed jax
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)

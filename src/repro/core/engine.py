@@ -46,6 +46,10 @@ class EngineConfig:
     corpus: object = None           # svi only: a repro.data.ShardedCorpus
                                     # for out-of-core minibatches; the model
                                     # passed to fit() stays unobserved
+    hosts: object = None            # svi only: a repro.data.HostAssignment —
+                                    # partition the corpus by shard ownership
+                                    # over a multi-process (or virtual-host)
+                                    # mesh; see docs/distributed.md
     # svi (see SVIConfig for semantics)
     batch_size: int = 64
     kappa: float = 0.7
@@ -207,7 +211,7 @@ def _fit_svi(model, cfg: EngineConfig, full_batch: bool) -> InferenceResult:
     else:
         target, n_groups = model, cfg.corpus.n_docs
     svi = SVI(target, _svi_config(cfg, full_batch, n_groups),
-              plan=cfg.sharding, corpus=cfg.corpus)
+              plan=cfg.sharding, corpus=cfg.corpus, hosts=cfg.hosts)
     steps, resumed_from = cfg.steps, None
     if cfg.resume:
         if cfg.checkpoint_dir is None:

@@ -30,6 +30,14 @@ The corpus itself need not be resident either: with ``SVI(corpus=...)`` a
 :class:`repro.data.ShardedCorpus` supplies each minibatch straight from
 memory-mapped disk shards (double-buffered host prefetch), bitwise
 equivalent to the resident path — see ``docs/data_pipeline.md``.
+
+And the corpus need not fit one *machine*: with ``hosts=`` a
+:class:`repro.data.HostAssignment` (plus a plan over a global mesh, in a
+``jax.distributed`` multi-process run), each host owns a deterministic
+subset of the corpus shards, minibatches partition the shared global
+permutation by document ownership, sufficient statistics and the held-out
+ELBO are psum'd across the mesh, and a single process with the same global
+device count reproduces the run bitwise — ``docs/distributed.md``.
 """
 
 from __future__ import annotations
@@ -292,13 +300,48 @@ def host_batch(program: VMPProgram, groups, caps_fn=None, plan=None,
     return {"arrays": arrays, "dirs": dirs}, caps, n_tok
 
 
-def device_put_batch(batch: dict) -> dict:
+class _ShardParts:
+    """Host-local rows of one leading-shard-dim batch array — the
+    multi-process analogue of the ``np.stack`` in :func:`host_batch`'s plan
+    path.  In a multi-host run each process materializes only the rows of
+    the mesh shards it hosts; :func:`device_put_batch` assembles them into
+    one global array (``launch.shardings.shard_stacked_array``)."""
+
+    __slots__ = ("shape", "dtype", "parts")
+
+    def __init__(self, n_shards: int, parts: dict):
+        row = next(iter(parts.values()))
+        self.shape = (n_shards,) + row.shape
+        self.dtype = row.dtype
+        self.parts = parts
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes for p in self.parts.values())
+
+
+def _put_leaf(vv, mesh=None, axes=()):
+    """One batch leaf onto the device(s): ``None`` passes through,
+    :class:`_ShardParts` becomes a global leading-dim-sharded array over
+    ``mesh``/``axes`` (each process contributes its own shards' rows),
+    plain numpy becomes a local ``jnp`` array."""
+    if vv is None:
+        return None
+    if isinstance(vv, _ShardParts):
+        from repro.launch.shardings import shard_stacked_array
+        return shard_stacked_array(mesh, axes, vv.shape, vv.dtype, vv.parts)
+    return jnp.asarray(vv)
+
+
+def device_put_batch(batch: dict, mesh=None, axes=()) -> dict:
     """Place a :func:`host_batch` result's numpy leaves on device
-    (``None`` leaves pass through)."""
-    return {"arrays": {k: {kk: None if vv is None else jnp.asarray(vv)
+    (``None`` leaves pass through).  ``mesh``/``axes`` serve the multi-host
+    path — see :func:`_put_leaf`."""
+    return {"arrays": {k: {kk: _put_leaf(vv, mesh, axes)
                            for kk, vv in v.items()}
                        for k, v in batch["arrays"].items()},
-            "dirs": {k: {kk: jnp.asarray(vv) for kk, vv in v.items()}
+            "dirs": {k: {kk: _put_leaf(vv, mesh, axes)
+                         for kk, vv in v.items()}
                      for k, v in batch["dirs"].items()}}
 
 
@@ -431,6 +474,46 @@ def _build_heldout_fn(program: VMPProgram, caps: dict[str, int],
     return build_local_scorer(program, caps, inner_iters, extras=False)
 
 
+def build_sharded_scorer(program: VMPProgram, caps: dict[str, int],
+                         inner_iters: int, plan):
+    """Distributed counterpart of :func:`build_local_scorer` (extras=False):
+    each mesh shard fits fresh local posteriors on its *own* held-out
+    sub-slice with the global Dirichlets frozen (replicated), and the
+    per-shard scores are psum'd over the plan's axes.
+
+    Correctness of the psum: after the per-shard score drops the global
+    Dirichlets' KL terms, what remains is purely shard-local — per-instance
+    logsumexp terms (masked) plus local-Dirichlet terms, and padding rows
+    sit exactly at the prior so they contribute 0 — so the sum over shards
+    is the score of the union.  The arrays carry a leading shard dim
+    (:func:`host_batch`'s plan layout) and in a multi-process mesh the
+    result is fully replicated, so every host reads the same scalar.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    fn = build_local_scorer(program, caps, inner_iters, extras=False)
+    axes = plan.axes
+
+    def body(posteriors, arrays):
+        sq = {k: {kk: (None if vv is None else vv[0])
+                  for kk, vv in v.items()} for k, v in arrays.items()}
+        return jax.lax.psum(fn(posteriors, sq), axes)
+
+    arr_spec = {}
+    for spec_l in program.latents:
+        arr_spec[spec_l.name] = {"prior_rows": P(axes), "mask": P(axes)}
+        for f in spec_l.children:
+            arr_spec[f.x_name] = {"values": P(axes), "zmap": P(axes),
+                                  "base": P(axes), "mask": P(axes)}
+    for s in program.statics:
+        arr_spec[s.x_name] = {"rows": P(axes), "values": P(axes),
+                              "mask": P(axes)}
+    post_spec = {n: P() for n in program.dirichlets}
+    return jax.jit(shard_map(body, plan.mesh,
+                             in_specs=(post_spec, arr_spec),
+                             out_specs=P()))
+
+
 def heldout_elbo(program: VMPProgram, state: VMPState, groups,
                  inner_iters: int = 10, cache: Optional[dict] = None,
                  slicer=None) -> float:
@@ -501,11 +584,13 @@ class SVI:
     """
 
     def __init__(self, program, config: SVIConfig = None, plan=None,
-                 corpus=None):
+                 corpus=None, hosts=None):
         from repro.data.pipeline import MinibatchSampler, holdout_split
         self.cfg = config or SVIConfig()
         self.plan = plan
         self.corpus = corpus
+        self.hosts = hosts
+        self._multiproc = False
         self._slicer = None
         self._caps_probe = None
         if self.cfg.growing and corpus is None:
@@ -539,6 +624,8 @@ class SVI:
                                              program, corpus)
             self._caps_probe = functools.partial(_store.sharded_caps,
                                                  program, corpus)
+        if hosts is not None:
+            self._init_hosts()
         self.program = program
         if program.meta.get("pstar") is None:
             raise ValueError("SVI needs a '?' partition plate "
@@ -557,7 +644,9 @@ class SVI:
             self.sampler = ShardedMinibatchSampler(
                 corpus=corpus, groups=self.train, batch_size=batch_size,
                 seed=self.cfg.seed, shuffle=self.cfg.shuffle,
-                loader=self._load_groups, prefetch=self.cfg.prefetch,
+                loader=(self._load_groups_hosts if hosts is not None
+                        else self._load_groups),
+                prefetch=self.cfg.prefetch,
                 grow=self.cfg.growing,
                 exclude=self.holdout if self.cfg.growing else None,
                 max_group=(program.meta["capacity_docs"]
@@ -602,13 +691,161 @@ class SVI:
                                      caps_probe=self._caps_probe)
         return hb, caps, n_tok, len(groups)
 
+    # -- multi-host partitioned batching ----------------------------------
+
+    def _init_hosts(self):
+        """Validate the topology and build the shard->host map.
+
+        ``hosts`` (a :class:`repro.data.HostAssignment`) turns the plan
+        path into ownership-partitioned batching: documents go to the mesh
+        shards of the host that *owns* them (``doc_ownership``), not to
+        whichever shard the global LPT pack prefers.  In a real
+        ``jax.distributed`` run (``jax.process_count() > 1``) the mesh
+        shards of host ``h`` are the devices of process ``h`` and the
+        corpus must be opened with the matching host view; in a single
+        process the same ``n_hosts`` are *virtual* — the mesh's devices are
+        split into ``n_hosts`` contiguous groups, which makes the SPMD
+        program identical to the real multi-process one at an equal global
+        device count (the bitwise 2-process-vs-virtual contract of
+        ``tests/test_multihost.py``).
+        """
+        from repro.data import store as _store
+        hosts = self.hosts
+        if self.corpus is None or self.plan is None:
+            raise ValueError("hosts= needs both corpus= (a partitioned "
+                             "ShardedCorpus) and plan= (the global mesh)")
+        if self.cfg.growing:
+            raise NotImplementedError(
+                "growing corpora are single-host for now: a multi-host "
+                "epoch snapshot needs a refresh barrier so every host "
+                "adopts the same commit")
+        devs = list(self.plan.mesh.devices.flat)
+        import jax as _jax
+        if _jax.process_count() > 1:
+            self._multiproc = True
+            if hosts.n_hosts != _jax.process_count():
+                raise ValueError(
+                    f"hosts.n_hosts={hosts.n_hosts} but this is a "
+                    f"{_jax.process_count()}-process run")
+            if hosts.host_id != _jax.process_index():
+                raise ValueError(
+                    f"hosts.host_id={hosts.host_id} but this process is "
+                    f"index {_jax.process_index()}")
+            if (self.corpus.hosts is None
+                    or self.corpus.hosts.host_id != hosts.host_id
+                    or self.corpus.hosts.n_hosts != hosts.n_hosts):
+                raise ValueError(
+                    "in a multi-process run the corpus must be opened with "
+                    "the matching host view: ShardedCorpus.open(path, "
+                    "hosts=HostAssignment(n_hosts, host_id, seed))")
+            self._shard_host = np.asarray(
+                [d.process_index for d in devs], np.int32)
+        else:
+            if self.corpus.hosts is not None:
+                raise ValueError("virtual-host mode (single process) needs "
+                                 "an unrestricted corpus — all shards are "
+                                 "local")
+            m = len(devs)
+            if m % hosts.n_hosts:
+                raise ValueError(f"{m} mesh devices do not split evenly "
+                                 f"into {hosts.n_hosts} virtual hosts")
+            self._shard_host = np.repeat(
+                np.arange(hosts.n_hosts, dtype=np.int32),
+                m // hosts.n_hosts)
+        ownership_seed = (self.corpus.hosts.seed
+                          if self.corpus.hosts is not None else hosts.seed)
+        self._doc_owner = _store.doc_ownership(
+            self.corpus.manifest, hosts.n_hosts, ownership_seed)
+
+    def _host_parts(self, groups: np.ndarray) -> list:
+        """Partition one *global* batch onto the mesh shards: each document
+        goes to its owner host (``doc_ownership`` — the only host that can
+        read it), then LPT-packs by token mass across that host's shards.
+        A pure function of (lengths, manifest, seed, mesh), so every host
+        computes the identical global partition with no communication."""
+        from .partition import lpt_pack
+        owner = self._doc_owner[groups]
+        parts: list = [None] * len(self._shard_host)
+        for h in range(self.hosts.n_hosts):
+            gh = groups[owner == h]
+            sids = np.flatnonzero(self._shard_host == h)
+            shard_of = lpt_pack(np.maximum(self._weights[gh], 1), len(sids))
+            for j, s in enumerate(sids):
+                parts[int(s)] = gh[shard_of == j]
+        return parts
+
+    def _stack_parts(self, leaves: dict, n_shards: int):
+        """Assemble per-shard leaf rows into one leading-shard-dim batch
+        leaf: a plain ``np.stack`` when every shard is local (the
+        single-process layout :func:`host_batch` produces), a
+        :class:`_ShardParts` carrier otherwise."""
+        if self._multiproc:
+            return _ShardParts(n_shards, leaves)
+        return np.stack([leaves[s] for s in sorted(leaves)])
+
+    def _load_groups_hosts(self, groups):
+        """Multi-host loader: the *schedule* stays the global ``(seed,
+        epoch)`` permutation (every host computes the same ``batch_at``);
+        only the slicing is partitioned.  Shared caps are agreed from the
+        lengths-only probe of **every** shard's part — no cross-host
+        traffic, no shard I/O — so all hosts pad to identical shapes and
+        the jitted step never diverges across processes."""
+        groups = np.unique(np.asarray(groups, np.int64))
+        parts = self._host_parts(groups)
+        caps: dict[str, int] = {}
+        for p in parts:
+            for k, v in self._caps_probe(p).items():
+                caps[k] = max(caps.get(k, 1), int(v))
+        caps = {k: max(int(self._caps_fn(k, v)), v) for k, v in caps.items()}
+        cf = lambda name, n: caps[name]                       # noqa: E731
+        local = (np.flatnonzero(self._shard_host == self.hosts.host_id)
+                 if self._multiproc else np.arange(len(parts)))
+        sliced = {int(s): self._slicer(parts[int(s)], cf) for s in local}
+        ref_a, ref_d = sliced[int(local[0])][0], sliced[int(local[0])][1]
+        arrays: dict = {}
+        for name in ref_a:
+            arrays[name] = {}
+            for kk, vv in ref_a[name].items():
+                arrays[name][kk] = None if vv is None else self._stack_parts(
+                    {int(s): sliced[int(s)][0][name][kk] for s in local},
+                    len(parts))
+        dirs = {name: {kk: self._stack_parts(
+            {int(s): sliced[int(s)][1][name][kk] for s in local},
+            len(parts)) for kk in ref_d[name]} for name in ref_d}
+        n_tok = int(np.asarray(self.corpus.lengths)[groups].sum())
+        return {"arrays": arrays, "dirs": dirs}, caps, n_tok, len(groups)
+
+    def _scalar(self, x):
+        """A step scalar every mesh shard can read: plain ``jnp.float32``
+        in-process, a replicated global array in a multi-process mesh."""
+        if not self._multiproc:
+            return jnp.float32(x)
+        from repro.launch.shardings import replicated_array
+        return replicated_array(self.plan.mesh, np.float32(x))
+
+    def _globalize(self, state: VMPState) -> VMPState:
+        """Re-home a host-local state as fully-replicated global arrays on
+        the multi-process mesh (no-op otherwise).  Every process holds
+        bitwise-identical values (seeded init, or a shared session file),
+        so no collective is needed."""
+        if not self._multiproc:
+            return state
+        from repro.launch.shardings import replicated_array
+        mesh = self.plan.mesh
+        return VMPState(
+            {n: replicated_array(mesh, np.asarray(v))
+             for n, v in state.posteriors.items()},
+            replicated_array(mesh, np.asarray(state.step, np.int32)))
+
     def step(self, t: int, state: VMPState):
         """One SVI step at schedule position ``t``; returns (state', elbo)."""
         if self.corpus is not None:
             hb, caps, _, n_b = self.sampler.host_batch_at(t)
         else:
             hb, caps, _, n_b = self._load_groups(self.sampler.batch_at(t))
-        batch = device_put_batch(hb)
+        batch = device_put_batch(
+            hb, mesh=self.plan.mesh if self._multiproc else None,
+            axes=self.plan.axes if self._multiproc else ())
         sig = tuple(sorted(caps.items()))
         if sig not in self._steps:
             self._steps[sig] = make_svi_step(
@@ -628,16 +865,59 @@ class SVI:
         else:
             n_pop = len(self.train)
         scale = n_pop / n_b
-        return self._steps[sig](state, batch, jnp.float32(rho),
-                                jnp.float32(scale))
+        return self._steps[sig](state, batch, self._scalar(rho),
+                                self._scalar(scale))
 
     def heldout_elbo(self, state: VMPState) -> float:
         """Per-token held-out ELBO at ``state`` (NaN without a holdout)."""
         if len(self.holdout) == 0:
             return float("nan")
+        if self.hosts is not None:
+            return self._heldout_hosts(state)
         return heldout_elbo(self.program, state, self.holdout,
                             self.cfg.holdout_local_iters,
                             cache=self._heldout_cache, slicer=self._slicer)
+
+    def _heldout_hosts(self, state: VMPState) -> float:
+        """Multi-host held-out ELBO: the holdout is partitioned by document
+        ownership exactly like a training batch (each host reads only its
+        shards), scored per shard with frozen globals, and psum'd
+        (:func:`build_sharded_scorer`).  Every host returns the identical
+        replicated scalar."""
+        groups = np.asarray(self.holdout, np.int64)
+        parts = self._host_parts(groups)
+        caps: dict[str, int] = {}
+        for p in parts:
+            for k, v in self._caps_probe(p).items():
+                caps[k] = max(caps.get(k, 1), int(v))
+        cf = lambda name, n: caps[name]                       # noqa: E731
+        local = (np.flatnonzero(self._shard_host == self.hosts.host_id)
+                 if self._multiproc else np.arange(len(parts)))
+        sliced = {int(s): self._slicer(parts[int(s)], cf)[0] for s in local}
+        ref = sliced[int(local[0])]
+        arrays: dict = {}
+        for name in ref:
+            arrays[name] = {}
+            for kk, vv in ref[name].items():
+                arrays[name][kk] = None if vv is None else self._stack_parts(
+                    {int(s): sliced[int(s)][name][kk] for s in local},
+                    len(parts))
+        n_tok = int(np.asarray(self.corpus.lengths)[groups].sum())
+        if n_tok == 0:
+            return float("nan")
+        sig = (tuple(sorted(caps.items())), self.cfg.holdout_local_iters,
+               "sharded")
+        fn = self._heldout_cache.get(sig)
+        if fn is None:
+            fn = build_sharded_scorer(self.program, caps,
+                                      self.cfg.holdout_local_iters,
+                                      self.plan)
+            self._heldout_cache[sig] = fn
+        mesh = self.plan.mesh if self._multiproc else None
+        axes = self.plan.axes if self._multiproc else ()
+        dev = {k: {kk: _put_leaf(vv, mesh, axes) for kk, vv in v.items()}
+               for k, v in arrays.items()}
+        return float(fn(state.posteriors, dev)) / n_tok
 
     def close(self):
         """Stop the sharded sampler's prefetch thread (no-op in resident
@@ -734,6 +1014,11 @@ class SVI:
             store = CheckpointStore(checkpoint_dir,
                                     every=max(1, checkpoint_every),
                                     keep=checkpoint_keep)
+            if self._multiproc and jax.process_index() != 0:
+                # one writer per cluster: the state is replicated, so host 0
+                # persists for everyone (sessions are read by all on resume
+                # — a shared filesystem is the multi-host contract)
+                store = None
         resume_dir = None
         if resume_from is True:
             if checkpoint_dir is None:
@@ -755,6 +1040,9 @@ class SVI:
                 state, history = self._adopt_session(sess, resume_dir)
         if state is None:
             state = init_state(self.program, self.cfg.seed)
+        # multi-process: re-home the (identical-everywhere) host state as
+        # replicated global arrays so the shard_map'd step can consume it
+        state = self._globalize(state)
         start = int(state.step)
         try:
             for t in range(start, start + steps):

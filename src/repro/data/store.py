@@ -54,6 +54,87 @@ _MANIFEST = "manifest.json"
 _LENGTHS = "lengths.npy"
 _FORMAT = "sharded-corpus"
 _VERSION = 1
+_OWNER_TAG = 0x1f5c  # domain-separates ownership hashing from sampler seeds
+
+
+# ---------------------------------------------------------------------------
+# shard ownership (multi-host corpora)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HostAssignment:
+    """This process's place in a multi-host corpus partition.
+
+    ``shard_ownership(n_shards, n_hosts, seed)`` is the single source of
+    truth for which host owns which shard; a :class:`ShardedCorpus` opened
+    with ``hosts=HostAssignment(...)`` enforces it — only owned shards are
+    ever memory-mapped, so each host's page cache holds its partition and
+    nothing else, while the global metadata (doc count, vocab, lengths)
+    still comes from the shared manifest and is identical on every host.
+    """
+    n_hosts: int
+    host_id: int
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {self.n_hosts}")
+        if not (0 <= self.host_id < self.n_hosts):
+            raise ValueError(f"host_id {self.host_id} out of range "
+                             f"[0, {self.n_hosts})")
+
+
+def shard_ownership(n_shards: int, n_hosts: int, seed: int = 0) -> np.ndarray:
+    """Deterministic shard -> owner-host assignment, ``(n_shards,) int32``.
+
+    Rendezvous (highest-random-weight) hashing: shard ``s`` belongs to the
+    host ``h`` maximizing a pseudorandom weight drawn from
+    ``SeedSequence([seed, _OWNER_TAG, s, h])`` — a pure function of
+    ``(seed, s, h)`` with no ordering or state, which gives the three
+    properties the multi-host layer needs (property-tested in
+    ``tests/test_property.py``):
+
+    - every shard has exactly one owner on every host's copy of the map;
+    - the map is a deterministic function of ``(n_shards, n_hosts, seed)``
+      — hosts never have to communicate to agree on it;
+    - **minimal movement on remesh**: adding host ``n`` only moves shards
+      whose new maximum is at ``n`` (each shard's other weights are
+      untouched), and removing a host only moves the shards it owned.
+
+    Shards are written on document boundaries, so shard ownership is also
+    document ownership (:func:`doc_ownership`).
+    """
+    if n_shards < 0:
+        raise ValueError("n_shards must be >= 0")
+    if n_hosts < 1:
+        raise ValueError("n_hosts must be >= 1")
+    owner = np.zeros(n_shards, np.int32)
+    if n_hosts == 1:
+        return owner
+    for s in range(n_shards):
+        best, best_w = 0, -1
+        for h in range(n_hosts):
+            w = int(np.random.SeedSequence(
+                [int(seed), _OWNER_TAG, s, h]).generate_state(
+                    1, np.uint64)[0])
+            if w > best_w:
+                best, best_w = h, w
+        owner[s] = best
+    return owner
+
+
+def doc_ownership(manifest: dict, n_hosts: int, seed: int = 0) -> np.ndarray:
+    """Per-document owner host, ``(n_docs,) int32`` — the shard owner map
+    expanded over each shard's ``[doc_start, doc_end)`` range.  Computed
+    from the manifest alone (no shard I/O), so every host can build the
+    identical map and partition a *global* minibatch without talking to
+    anyone."""
+    shards = manifest["shards"]
+    owner = shard_ownership(len(shards), n_hosts, seed)
+    out = np.zeros(int(manifest["n_docs"]), np.int32)
+    for sid, s in enumerate(shards):
+        out[int(s["doc_start"]):int(s["doc_end"])] = owner[sid]
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -378,10 +459,21 @@ class ShardedCorpus:
     manifest without reopening — existing shard mmaps stay valid (shards
     are immutable; commits only append), and already-handed-out doc ids
     keep meaning the same documents.
+
+    **Multi-host partitioning**: with ``hosts=`` a :class:`HostAssignment`,
+    this reader is one host's view of a corpus shared by ``n_hosts``
+    processes (e.g. on a cluster filesystem).  Shard ownership comes from
+    :func:`shard_ownership`; only owned shards may be memory-mapped
+    (:meth:`gather_tokens` of an unowned document raises), while the global
+    metadata — ``n_docs``, ``n_tokens``, ``vocab``, ``lengths`` — is read
+    from the shared manifest and is identical on every host.  See
+    ``docs/distributed.md``.
     """
 
-    def __init__(self, path: str, manifest: dict, lengths: np.ndarray):
+    def __init__(self, path: str, manifest: dict, lengths: np.ndarray,
+                 hosts: Optional[HostAssignment] = None):
         self.path = str(path)
+        self.hosts = hosts
         self._mmaps: dict[int, np.ndarray] = {}
         self._lock = threading.Lock()   # gather_tokens runs on the prefetch
         self.bytes_read = 0             # thread concurrently with held-out
@@ -411,12 +503,25 @@ class ShardedCorpus:
             [s["token_start"] for s in manifest["shards"]], np.int64)
         tok_end = np.asarray(
             [s["token_end"] for s in manifest["shards"]], np.int64)
+        shard_owner = doc_owner = None
+        if self.hosts is not None:
+            # ownership is per shard, so a refresh (append-only: existing
+            # shards keep their ids) never reassigns an existing shard
+            shard_owner = shard_ownership(len(manifest["shards"]),
+                                          self.hosts.n_hosts,
+                                          self.hosts.seed)
+            doc_owner = np.zeros(int(manifest["n_docs"]), np.int32)
+            for sid, s in enumerate(manifest["shards"]):
+                doc_owner[int(s["doc_start"]):int(s["doc_end"])] = \
+                    shard_owner[sid]
         with self._lock:
             self.manifest = manifest
             self.lengths = lengths
             self.offsets = offsets
             self._shard_tok_start = tok_start
             self._shard_tok_end = tok_end
+            self.shard_owner = shard_owner
+            self.doc_owner = doc_owner
 
     def refresh(self) -> bool:
         """Pick up documents committed since this reader's snapshot.
@@ -448,8 +553,10 @@ class ShardedCorpus:
         return True
 
     @classmethod
-    def open(cls, path: str) -> "ShardedCorpus":
-        """Open an existing store directory (``manifest.json`` required)."""
+    def open(cls, path: str,
+             hosts: Optional[HostAssignment] = None) -> "ShardedCorpus":
+        """Open an existing store directory (``manifest.json`` required).
+        ``hosts=`` opens one host's partition view (see class docstring)."""
         mf = os.path.join(str(path), _MANIFEST)
         if not os.path.exists(mf):
             raise FileNotFoundError(f"no {_MANIFEST} in {path}; write one "
@@ -459,7 +566,7 @@ class ShardedCorpus:
         if manifest.get("format") != _FORMAT:
             raise ValueError(f"{mf}: not a {_FORMAT} manifest")
         lengths = np.load(os.path.join(str(path), _LENGTHS))
-        return cls(path, manifest, lengths)
+        return cls(path, manifest, lengths, hosts=hosts)
 
     # -- metadata ---------------------------------------------------------
     @property
@@ -485,8 +592,39 @@ class ShardedCorpus:
         return sum(os.path.getsize(os.path.join(self.path, s["path"]))
                    for s in self.manifest["shards"])
 
+    # -- multi-host partition view ----------------------------------------
+    def owned_shards(self) -> np.ndarray:
+        """Shard ids this host owns (all of them without ``hosts=``)."""
+        if self.hosts is None:
+            return np.arange(self.n_shards, dtype=np.int64)
+        return np.flatnonzero(self.shard_owner == self.hosts.host_id)
+
+    def owned_doc_ids(self) -> np.ndarray:
+        """Doc ids this host owns — the docs of its owned shards."""
+        if self.hosts is None:
+            return np.arange(self.n_docs, dtype=np.int64)
+        return np.flatnonzero(self.doc_owner == self.hosts.host_id)
+
+    @property
+    def owned_disk_bytes(self) -> int:
+        """On-disk bytes of the owned shards — the ceiling of what this
+        host's page cache can ever hold of the corpus (the per-host
+        working-set figure ``bench_multihost`` reports)."""
+        if self.hosts is None:
+            return self.disk_bytes
+        return sum(os.path.getsize(
+            os.path.join(self.path, self.manifest["shards"][int(s)]["path"]))
+            for s in self.owned_shards())
+
     def _mmap(self, sid: int) -> np.ndarray:
         with self._lock:
+            if (self.shard_owner is not None
+                    and int(self.shard_owner[sid]) != self.hosts.host_id):
+                raise PermissionError(
+                    f"{self.path}: shard {sid} is owned by host "
+                    f"{int(self.shard_owner[sid])}, not this host "
+                    f"{self.hosts.host_id} — multi-host readers mmap only "
+                    f"their own shards (partition the batch by doc_owner)")
             mm = self._mmaps.get(sid)
             if mm is None:
                 mm = np.load(
@@ -531,8 +669,16 @@ class ShardedCorpus:
             tok_start = self._shard_tok_start
             tok_end = self._shard_tok_end
             n_docs = int(self.manifest["n_docs"])
+            doc_owner = self.doc_owner
         if int(docs.min()) < 0 or int(docs.max()) >= n_docs:
             raise IndexError(f"doc ids out of range [0, {n_docs})")
+        if doc_owner is not None:
+            alien = docs[doc_owner[docs] != self.hosts.host_id]
+            if len(alien):
+                raise PermissionError(
+                    f"{self.path}: docs {alien[:5].tolist()}... are not "
+                    f"owned by host {self.hosts.host_id} "
+                    f"(of {self.hosts.n_hosts}); gather only owned docs")
         starts = offsets[docs]
         ends = offsets[docs + 1]
         pieces: list[np.ndarray] = []
@@ -618,7 +764,14 @@ def sharded_template(model, corpus: ShardedCorpus,
     p = min(int(proto_docs), corpus.n_docs)
     if p < 1:
         raise ValueError("corpus has no documents")
-    proto_tokens = corpus.gather_tokens(np.arange(p))
+    # the proto slice reads the first documents, which a host-partitioned
+    # view may not own; read them through an unrestricted reader over the
+    # SAME snapshot (manifest + lengths), so the template — and everything
+    # derived from it — is identical on every host
+    reader = corpus
+    if corpus.hosts is not None:
+        reader = ShardedCorpus(corpus.path, corpus.manifest, corpus.lengths)
+    proto_tokens = reader.gather_tokens(np.arange(p))
     proto_ids = np.repeat(np.arange(p, dtype=np.int32), corpus.lengths[:p])
     try:
         model[observe].observe(proto_tokens, segment_ids=proto_ids)
@@ -767,14 +920,15 @@ class _Prefetcher:
         self._fn = fn
         self._thread: Optional[threading.Thread] = None
         self._step: Optional[int] = None
-        self._box: Optional[tuple] = None
+        self._box: Optional[dict] = None
 
     def get(self, t: int):
         out = None
         if self._thread is not None:
             self._thread.join()
+            kind, val = (self._box.get("r", (None, None))
+                         if self._step == t else (None, None))
             self._thread = None
-            kind, val = self._box if self._step == t else (None, None)
             self._box = None
             if kind == "exc":
                 raise val
@@ -785,24 +939,42 @@ class _Prefetcher:
         return out
 
     def _schedule(self, t: int):
+        # each worker writes into its own box: a worker abandoned by a
+        # timed-out close() that finishes late can never leak its stale
+        # result into a newer schedule slot
+        box: dict = {}
+
         def work():
             try:
-                self._box = ("ok", self._fn(t))
+                box["r"] = ("ok", self._fn(t))
             except BaseException as e:          # re-raised at get(t)
-                self._box = ("exc", e)
+                box["r"] = ("exc", e)
 
         self._step = t
+        self._box = box
         self._thread = threading.Thread(target=work, daemon=True,
                                         name="sharded-corpus-prefetch")
         self._thread.start()
 
-    def close(self):
-        """Join the in-flight worker (if any) and drop its result."""
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+    def close(self, timeout: Optional[float] = 5.0) -> bool:
+        """Stop prefetching and drop the in-flight result.
+
+        Joins the worker with ``timeout`` (seconds; ``None`` = wait
+        forever).  A worker stuck in a blocked loader — shard I/O on a hung
+        filesystem, a corpus refresh waiting on a dead writer — used to
+        hang ``close()`` indefinitely; now it is *abandoned* instead: the
+        daemon thread keeps running but writes only to its own private
+        result box, so it can never corrupt later state, and the process
+        can still exit (daemon threads don't block interpreter shutdown).
+        Returns ``True`` iff the worker actually finished (always ``True``
+        when there was none)."""
+        th, self._thread = self._thread, None
         self._box = None
         self._step = None
+        if th is None:
+            return True
+        th.join(timeout)
+        return not th.is_alive()
 
 
 @dataclasses.dataclass
@@ -942,22 +1114,30 @@ class ShardedMinibatchSampler:
             return self._load_at(step)
         return self._prefetcher.get(step)
 
-    def close(self):
-        """Stop the prefetch worker (idempotent)."""
+    def close(self, timeout: Optional[float] = 5.0) -> bool:
+        """Stop the prefetch worker (idempotent).  Joins with ``timeout``
+        seconds (``None`` = forever); a worker blocked in the loader is
+        abandoned rather than hanging the caller — see
+        :meth:`_Prefetcher.close`.  Returns ``True`` iff no worker was left
+        running."""
         if self._prefetcher is not None:
-            self._prefetcher.close()
+            return self._prefetcher.close(timeout)
+        return True
 
 
 def _tree_nbytes(obj) -> int:
-    """Total nbytes of the numpy leaves of a nested dict/list/tuple."""
+    """Total nbytes of the array-like leaves of a nested dict/list/tuple
+    (anything exposing ``nbytes`` counts — e.g. the multi-host batch's
+    per-shard leaf containers)."""
     if isinstance(obj, np.ndarray):
         return obj.nbytes
     if isinstance(obj, dict):
         return sum(_tree_nbytes(v) for v in obj.values())
     if isinstance(obj, (list, tuple)):
         return sum(_tree_nbytes(v) for v in obj)
-    return 0
+    return int(getattr(obj, "nbytes", 0) or 0)
 
 
-__all__ = ["ShardedCorpus", "ShardedCorpusWriter", "ShardedMinibatchSampler",
-           "write_sharded_corpus", "sharded_template", "slice_sharded"]
+__all__ = ["HostAssignment", "ShardedCorpus", "ShardedCorpusWriter",
+           "ShardedMinibatchSampler", "doc_ownership", "shard_ownership",
+           "sharded_template", "slice_sharded", "write_sharded_corpus"]

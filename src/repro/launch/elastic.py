@@ -95,3 +95,62 @@ def remesh_and_resume_svi(model, engine_cfg, checkpoint_dir: str,
     eng = make_engine(engine_cfg, sharding=plan,
                       checkpoint_dir=checkpoint_dir, resume=True)
     return eng.fit(model)
+
+
+def multihost_svi_session(model, engine_cfg, corpus_dir: str,
+                          checkpoint_dir: str | None = None, *,
+                          n_hosts: int | None = None,
+                          host_id: int | None = None,
+                          coordinator: str | None = None,
+                          ownership_seed: int = 0):
+    """One host's entry point into a multi-host SVI fit over a partitioned
+    corpus — the distributed analogue of :func:`remesh_and_resume_svi`.
+
+    With ``coordinator`` ("host:port") the process first joins the
+    ``jax.distributed`` cluster as process ``host_id`` of ``n_hosts``
+    (CPU collectives via :func:`repro.compat.distributed_initialize`).
+    In a multi-process runtime the corpus is opened through a
+    :class:`~repro.data.HostAssignment` view, so this host mmaps only the
+    shards it owns; single-process callers get ``n_hosts`` *virtual* hosts
+    over the local devices (same partitioned batching, unrestricted I/O).
+
+    The mesh is the full global device set on one ``("data",)`` axis.
+    With ``checkpoint_dir`` the fit resumes from the newest valid session
+    (host 0 is the sole writer; all hosts read — shared-filesystem
+    contract), which is how an elastic remesh works here: relaunch every
+    surviving/new host with the new ``n_hosts`` and the same
+    ``checkpoint_dir``/``ownership_seed``; shard ownership re-derives from
+    the new topology (HRW hashing moves only the minimal shards) and the
+    schedule continues exactly — deterministic-going-forward, bitwise when
+    the global device count is unchanged.  See ``docs/distributed.md``.
+    """
+    from repro.checkpoint import latest_session_step
+    from repro.core.engine import make_engine
+    from repro.core.partition import ShardingPlan
+    from repro.data import HostAssignment, ShardedCorpus
+
+    if coordinator is not None:
+        from repro.compat import distributed_initialize
+        if n_hosts is None or host_id is None:
+            raise ValueError("coordinator= needs explicit n_hosts/host_id")
+        distributed_initialize(coordinator_address=coordinator,
+                               num_processes=n_hosts, process_id=host_id)
+    multiproc = jax.process_count() > 1
+    if n_hosts is None:
+        n_hosts = jax.process_count()
+    if host_id is None:
+        host_id = jax.process_index() if multiproc else 0
+    hosts = HostAssignment(n_hosts, host_id, ownership_seed)
+    # real multi-process runs restrict corpus I/O to owned shards; a
+    # single process simulating n virtual hosts must keep all shards
+    # readable (SVI rejects a restricted view in virtual mode)
+    corpus = ShardedCorpus.open(corpus_dir, hosts=hosts if multiproc
+                                else None)
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    plan = ShardingPlan(mesh, ("data",), "inferspark")
+    resume = bool(checkpoint_dir
+                  and latest_session_step(checkpoint_dir) is not None)
+    eng = make_engine(engine_cfg, sharding=plan, corpus=corpus,
+                      hosts=hosts, checkpoint_dir=checkpoint_dir,
+                      resume=resume)
+    return eng.fit(model)

@@ -75,7 +75,7 @@ def build_infer_step(program, engine="vmp", corpus=None):
             holdout_frac=engine.holdout_frac,
             holdout_every=engine.holdout_every, seed=engine.seed,
             elog_dtype=engine.elog_dtype),
-            plan=engine.sharding, corpus=corpus)
+            plan=engine.sharding, corpus=corpus, hosts=engine.hosts)
 
         def step_fn(state):
             return svi.step(int(state.step), state)

@@ -206,6 +206,52 @@ def test_minibatch_sampler_partitions_epoch(seed, n, b, epochs):
         assert np.array_equal(np.sort(seen), np.arange(n))
 
 
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 128),
+       h=st.integers(1, 8))
+def test_shard_ownership_exactly_one_owner(seed, n, h):
+    """Every shard has exactly one owner, in range, on a map that is a
+    pure function of ``(n_shards, n_hosts, seed)`` — hosts agree on it
+    with no communication."""
+    from repro.data import shard_ownership
+    own = shard_ownership(n, h, seed)
+    assert own.shape == (n,) and own.dtype == np.int32
+    assert (own >= 0).all() and (own < h).all()
+    np.testing.assert_array_equal(own, shard_ownership(n, h, seed))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 128),
+       h=st.integers(1, 7))
+def test_shard_ownership_minimal_movement(seed, n, h):
+    """Rendezvous hashing: adding host ``h`` moves shards only TO the new
+    host (survivors keep everything they had), and removing it restores
+    the old map exactly — the elastic-remesh property, shards moved is
+    the theoretical minimum."""
+    from repro.data import shard_ownership
+    before = shard_ownership(n, h, seed)
+    after = shard_ownership(n, h + 1, seed)
+    moved = before != after
+    assert (after[moved] == h).all()
+    # leave == inverse of join: recomputing at h hosts is bitwise `before`
+    np.testing.assert_array_equal(shard_ownership(n, h, seed), before)
+    # expected movement is ~n/(h+1); allow generous slack but catch a
+    # reshuffle-everything regression
+    assert moved.sum() <= max(8, 4 * n // (h + 1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), grow=st.integers(1, 30),
+       n=st.integers(1, 100), h=st.integers(1, 6))
+def test_shard_ownership_append_stable(seed, grow, n, h):
+    """Appending shards (a growing corpus) never reassigns existing ones:
+    the map for the first ``n`` shards is a prefix of the map for
+    ``n + grow`` — per-shard hashing has no dependence on n_shards."""
+    from repro.data import shard_ownership
+    np.testing.assert_array_equal(
+        shard_ownership(n + grow, h, seed)[:n], shard_ownership(n, h, seed))
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 1000), n=st.integers(1, 64), e=st.integers(2, 8),
        k=st.integers(1, 3))

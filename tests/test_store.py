@@ -205,6 +205,46 @@ def test_prefetch_is_transparent(store):
     bad.close()
 
 
+def test_prefetch_close_abandons_blocked_loader(store):
+    """Regression: close() used to join the prefetch worker with no
+    timeout, so a loader blocked on a hung filesystem (or a dead writer's
+    refresh) hung shutdown forever.  Now the worker is abandoned after the
+    timeout (close returns False), it can never write into newer state,
+    and a clean close leaks no prefetch threads."""
+    import threading
+    import time
+    release = threading.Event()
+    entered = threading.Event()
+
+    def stuck(groups):
+        entered.set()
+        release.wait()                    # a hung shard read
+        return groups
+
+    s = ShardedMinibatchSampler(corpus=store, groups=np.arange(store.n_docs),
+                                batch_size=8, seed=0, loader=stuck)
+    # schedule the worker directly (get() itself would block on the stuck
+    # synchronous load before ever reaching the prefetcher)
+    s._prefetcher._schedule(0)
+    assert entered.wait(timeout=10)
+    t0 = time.monotonic()
+    assert s.close(timeout=0.2) is False      # worker abandoned, not joined
+    assert time.monotonic() - t0 < 5
+    # the abandoned worker finishing late must not resurrect any state
+    release.set()
+    time.sleep(0.05)
+    assert s._prefetcher._thread is None and s._prefetcher._box is None
+    # clean path: a drained close really joins — no leaked threads
+    s2 = ShardedMinibatchSampler(corpus=store,
+                                 groups=np.arange(store.n_docs),
+                                 batch_size=8, seed=0,
+                                 loader=store.gather_tokens)
+    s2.host_batch_at(0)
+    assert s2.close() is True
+    assert not [th for th in threading.enumerate()
+                if th.name == "sharded-corpus-prefetch" and th.is_alive()]
+
+
 # ---------------------------------------------------------------------------
 # SVI: sharded == resident, bitwise
 # ---------------------------------------------------------------------------
