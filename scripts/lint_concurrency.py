@@ -1,0 +1,258 @@
+#!/usr/bin/env python
+"""AST concurrency lint: the locking/ordering invariants PRs 6-8 rely on.
+
+The store/pipeline/serving/checkpoint layers share mutable state between
+the training thread, the prefetch thread, and live corpus writers.  The
+invariants that keep them correct are easy to break in review-invisible
+ways (move a line out of a ``with`` block, swap two ``os.replace`` calls),
+so this lint enforces them mechanically:
+
+  CL001  mmap-cache access outside the reader lock.  ``ShardedCorpus``
+         caches shard mmaps in ``self._mmaps``; ``gather_tokens`` runs on
+         the prefetch thread concurrently with held-out scoring, so every
+         read/write of the cache must sit inside a ``with self._lock``
+         block (construction in ``__init__`` is exempt — no concurrency
+         exists yet).
+
+  CL002  manifest replaced before lengths.  The writer's crash-safe
+         commit protocol replaces ``lengths.npy`` (atomic temp +
+         ``os.replace``) strictly *before* ``manifest.json``: a reader
+         that sees the new manifest must find lengths covering it.
+         Within one function, an ``os.replace`` whose destination names
+         the manifest must not precede one naming the lengths file.
+
+  CL003  thread join while holding a lock.  The joined thread may be
+         blocked acquiring that same lock (the prefetch callback / closer
+         deadlock PR 6 fixed); join outside the ``with`` block.
+
+  CL004  ``time.sleep`` while holding a lock: stalls every other thread
+         contending for it (polling loops must sleep unlocked).
+
+A ``with`` statement counts as a lock block when any of its context
+expressions mentions ``lock`` (``self._lock``, ``refresh_lock``, ...).
+Code inside a nested ``def`` is a fresh thread of control — the enclosing
+``with`` does not cover its eventual execution, so lock state resets.
+
+Suppression (one line, justification required)::
+
+    mm = self._mmaps.get(sid)  # lint: disable=CL001 — single-thread setup
+
+Run over the default four files or explicit paths/directories::
+
+    python scripts/lint_concurrency.py [src/ ...]
+
+Exit status 1 when findings remain after suppression.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+import sys
+
+RULES = {
+    "CL001": "mmap cache accessed outside the reader lock",
+    "CL002": "manifest os.replace precedes the lengths os.replace",
+    "CL003": "thread join while holding a lock (deadlock hazard)",
+    "CL004": "time.sleep while holding a lock",
+}
+
+#: attributes that are cross-thread mmap/offset caches (CL001)
+MMAP_CACHE_ATTRS = {"_mmaps"}
+
+#: lint these (relative to the repo root) when no paths are given
+DEFAULT_PATHS = [
+    "src/repro/data/store.py",
+    "src/repro/data/pipeline.py",
+    "src/repro/query/server.py",
+    "src/repro/checkpoint/store.py",
+]
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*disable=([A-Z0-9, ]+?)(?:\s*[—:-]+\s*(\S.*))?$")
+
+
+@dataclasses.dataclass
+class Finding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _suppressions(path: str, source: str):
+    """``{lineno: {codes}}`` plus CL000 findings for malformed ones."""
+    sup: dict[int, set] = {}
+    bad: list[Finding] = []
+    for i, line in enumerate(source.splitlines(), 1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+        unknown = codes - set(RULES)
+        if unknown:
+            bad.append(Finding(path, i, "CL000",
+                               f"suppression names unknown rule(s) "
+                               f"{sorted(unknown)}"))
+        if not (m.group(2) or "").strip():
+            bad.append(Finding(path, i, "CL000",
+                               "suppression without a justification "
+                               "(write `# lint: disable=CLnnn — why`)"))
+        sup[i] = codes
+    return sup, bad
+
+
+def _mentions_lock(node: ast.AST) -> bool:
+    try:
+        return "lock" in ast.unparse(node).lower()
+    except Exception:                                   # pragma: no cover
+        return False
+
+
+def _replace_dst(call: ast.Call) -> str:
+    """Lowercased source of an ``os.replace`` destination argument."""
+    if len(call.args) >= 2:
+        return ast.unparse(call.args[1]).lower()
+    return ""
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: list[Finding] = []
+        self._lock_depth = 0
+        self._funcs: list[str] = []
+
+    def _flag(self, node, code, message):
+        self.findings.append(Finding(self.path, node.lineno, code, message))
+
+    # -- lock-block tracking ------------------------------------------------
+    def visit_With(self, node):
+        locked = any(_mentions_lock(item.context_expr)
+                     for item in node.items)
+        self._lock_depth += locked
+        self.generic_visit(node)
+        self._lock_depth -= locked
+
+    visit_AsyncWith = visit_With
+
+    def visit_FunctionDef(self, node):
+        # a nested def runs later, on some thread — not under this lock
+        outer, self._lock_depth = self._lock_depth, 0
+        self._funcs.append(node.name)
+        self._check_replace_order(node)
+        self.generic_visit(node)
+        self._funcs.pop()
+        self._lock_depth = outer
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- CL001: mmap cache under lock ---------------------------------------
+    def visit_Attribute(self, node):
+        if (node.attr in MMAP_CACHE_ATTRS
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and self._lock_depth == 0
+                and (not self._funcs or self._funcs[-1] != "__init__")):
+            self._flag(node, "CL001",
+                       f"self.{node.attr} accessed outside a `with "
+                       f"self._lock` block (prefetch thread races "
+                       f"held-out scoring)")
+        self.generic_visit(node)
+
+    # -- CL002: lengths os.replace before manifest os.replace ---------------
+    def _check_replace_order(self, func):
+        calls = []
+        stack = list(ast.iter_child_nodes(func))
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue        # nested defs get their own pass
+            if (isinstance(n, ast.Call)
+                    and ast.unparse(n.func) == "os.replace"):
+                calls.append(n)
+            stack.extend(ast.iter_child_nodes(n))
+        lengths = [c for c in calls if "lengths" in _replace_dst(c)]
+        manifests = [c for c in calls if "manifest" in _replace_dst(c)]
+        if not (lengths and manifests):
+            return
+        first_lengths = min(c.lineno for c in lengths)
+        for c in manifests:
+            if c.lineno < first_lengths:
+                self._flag(c, "CL002",
+                           "manifest os.replace before the lengths "
+                           "os.replace: a reader adopting the new manifest "
+                           "would see stale lengths")
+
+    # -- CL003/CL004: blocking calls under lock -----------------------------
+    def visit_Call(self, node):
+        if self._lock_depth:
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "join":
+                recv = ast.unparse(f.value)
+                # separator.join(strings) is not a thread join
+                if not (isinstance(f.value, ast.Constant)
+                        or recv.startswith("os.path")
+                        or recv.endswith("sep")):
+                    self._flag(node, "CL003",
+                               f"{recv}.join() while holding a lock — the "
+                               f"joined thread may be blocked on that lock")
+            src = ast.unparse(f)
+            if src in ("time.sleep", "sleep"):
+                self._flag(node, "CL004",
+                           "time.sleep while holding a lock stalls every "
+                           "contending thread")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Findings for one module's source, suppressions applied."""
+    sup, findings = _suppressions(path, source)
+    v = _Visitor(path)
+    v.visit(ast.parse(source, filename=path))
+    for f in v.findings:
+        if f.code not in sup.get(f.line, ()):
+            findings.append(f)
+    return sorted(findings, key=lambda f: (f.line, f.code))
+
+
+def lint_paths(paths) -> list[Finding]:
+    """Lint files and directories (directories walk ``*.py``)."""
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files.extend(os.path.join(root, n)
+                             for n in sorted(names) if n.endswith(".py"))
+        else:
+            files.append(p)
+    out = []
+    for f in files:
+        with open(f, encoding="utf-8") as fh:
+            out.extend(lint_source(fh.read(), f))
+    return out
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv in (["-h"], ["--help"]):
+        print(__doc__)
+        return 0
+    if not argv:
+        here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        argv = [os.path.join(here, p) for p in DEFAULT_PATHS]
+    findings = lint_paths(argv)
+    for f in findings:
+        print(f)
+    print(f"lint_concurrency: {len(findings)} finding(s) in "
+          f"{len(argv)} path(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

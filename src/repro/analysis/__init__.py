@@ -1,0 +1,45 @@
+"""Static analysis over models, programs, and configs — no tracing.
+
+Three passes (docs/static_analysis.md):
+
+  - ``validate``  — pre-compile diagnostics for a model (supported-class,
+    plates, shapes) as :class:`~repro.analysis.diagnostics.Diagnostic`
+    objects instead of mid-compile exceptions,
+  - ``explain``   — the inference EXPLAIN plan: kernel routing, padded
+    shape signatures, HBM-traffic prediction, host partitioning,
+  - ``audit``     — retrace-hazard audit of (config, corpus) combinations.
+
+Lazy attribute access keeps ``repro.analysis.diagnostics`` importable
+from ``core.compiler`` without dragging ``explain`` (which imports core)
+into the import cycle.
+"""
+
+from __future__ import annotations
+
+__all__ = ["diagnostics", "validate", "explain", "audit",
+           "Diagnostic", "validate_model", "preflight", "explain_plan",
+           "Plan", "audit_config"]
+
+_LAZY = {
+    "Diagnostic": ("repro.analysis.diagnostics", "Diagnostic"),
+    "validate_model": ("repro.analysis.validate", "validate_model"),
+    "preflight": ("repro.analysis.validate", "preflight"),
+    "explain_plan": ("repro.analysis.explain", "explain_plan"),
+    "Plan": ("repro.analysis.explain", "Plan"),
+    "audit_config": ("repro.analysis.audit", "audit_config"),
+    "diagnostics": ("repro.analysis.diagnostics", None),
+    "validate": ("repro.analysis.validate", None),
+    "explain": ("repro.analysis.explain", None),
+    "audit": ("repro.analysis.audit", None),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.analysis' has no attribute "
+                             f"{name!r}") from None
+    import importlib
+    mod = importlib.import_module(mod_name)
+    return getattr(mod, attr) if attr else mod

@@ -23,6 +23,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.analysis.diagnostics import raise_error, raise_unsupported
+
 from .network import UNKNOWN, BayesianNetwork, CategoricalRV, DirichletRV, Plate
 
 
@@ -141,8 +143,11 @@ class _PlateInfo:
     def _bind_leaf(self, plate: Plate, n: int, segment_ids):
         pid = id(plate)
         if pid in self.flat and self.flat[pid] != n:
-            raise ValueError(f"plate {plate.name}: conflicting sizes "
-                             f"{self.flat[pid]} vs {n}")
+            raise_error("plate-size-conflict", plate.name,
+                        f"plate {plate.name}: conflicting sizes "
+                        f"{self.flat[pid]} vs {n}",
+                        hint="every observation/binding on one plate must "
+                             "agree on its flattened size")
         self.flat[pid] = n
         if segment_ids is not None:
             self.parent_map[pid] = np.asarray(segment_ids, np.int32)
@@ -195,9 +200,13 @@ def _dirichlet_rows(pl: _PlateInfo, d: DirichletRV, child: CategoricalRV):
     for i, p in enumerate(chain):
         if p.size == UNKNOWN:
             if i != 0:
-                raise NotImplementedError(
-                    "'?' plates are only supported as the outermost plate of "
-                    "a Dirichlet's chain")
+                raise_unsupported(
+                    "unknown-plate-position", d.name,
+                    f"{d.name} (plate {d.plate.path()}): '?' plates are only "
+                    f"supported as the outermost plate of a Dirichlet's chain "
+                    f"(plate {p.name} is at position {i})",
+                    hint="move the unknown-size plate outermost or give it "
+                         "a fixed size")
             sizes.append(pl.flat[id(p)])
         else:
             sizes.append(p.size)
@@ -250,14 +259,21 @@ def compile_program(net: BayesianNetwork, observations: dict,
     for d in net.dirichlets():
         g = pl.flat.get(id(d.plate))
         if g is None:
-            raise ValueError(f"{d.name}: plate {d.plate.name} size unresolved")
+            raise_error("plate-unresolved", d.name,
+                        f"{d.name}: plate {d.plate.name} size unresolved",
+                        hint="observe data on the plate or bind it "
+                             "(Model.bind) before compiling")
         prior = np.asarray(d.conc, dtype=np.float32)
         if prior.ndim == 0:
             prior = np.full((d.dim,), float(prior), dtype=np.float32)
         if prior.shape != (d.dim,):
-            raise ValueError(f"{d.name}: prior shape {prior.shape} != ({d.dim},)")
+            raise_error("prior-shape", d.name,
+                        f"{d.name}: prior shape {prior.shape} != ({d.dim},)",
+                        hint="pass a scalar or a length-dim concentration "
+                             "vector")
         if (prior <= 0).any():
-            raise ValueError(f"{d.name}: concentrations must be positive")
+            raise_error("prior-positive", d.name,
+                        f"{d.name}: concentrations must be positive")
         chain = d.plate.chain()
         group_rows = None
         if pstar is not None and chain and chain[0] is pstar:
@@ -293,23 +309,36 @@ def compile_program(net: BayesianNetwork, observations: dict,
                                 pl.flat[id(rv.selector.plate)]))
         else:
             if rv.selector is not None:
-                raise NotImplementedError(
-                    "latent mixtures of latents are outside the supported class")
+                raise_unsupported(
+                    "latent-mixture", f"{rv.name}->{rv.selector.name}",
+                    f"latent {rv.name} (plate {rv.plate.path()}) is selected "
+                    f"by latent {rv.selector.name} — latent mixtures of "
+                    f"latents are outside the supported class",
+                    hint=f"observe {rv.name} or remove the selector edge "
+                         f"from {rv.selector.name}")
 
     for rv in net.latent_categoricals():
         n = pl.flat.get(id(rv.plate))
         if n is None:
-            raise ValueError(f"latent {rv.name}: plate size unresolved; "
-                             f"observe its children or bind the plate")
+            raise_error("plate-unresolved", rv.name,
+                        f"latent {rv.name}: plate size unresolved; "
+                        f"observe its children or bind the plate")
         base, stride = _dirichlet_rows(pl, rv.parent, rv)
         if stride:
-            raise ValueError(f"latent {rv.name} cannot itself be a mixture")
+            raise_error("latent-strided", rv.name,
+                        f"latent {rv.name} (plate {rv.plate.path()}) cannot "
+                        f"itself be a mixture: its prior {rv.parent.name} has "
+                        f"a selector-resolved plate",
+                        hint=f"give {rv.name} a statically-indexed prior")
         prior_rows = base if base is not None else np.zeros(n, np.int32)
         latents.append(LatentSpec(rv.name, n, rv.dim, rv.parent.name,
                                   prior_rows, children_of.pop(rv.name, []),
                                   group=_group_of(rv.plate)))
     if children_of:
-        raise ValueError(f"selectors without latent spec: {list(children_of)}")
+        raise_error("orphan-selector", ",".join(children_of),
+                    f"selectors without latent spec: {list(children_of)}",
+                    hint="every selector must be a latent Categorical in "
+                         "the model")
 
     # consecutive vertex-ID intervals, in definition order (paper section 4.2)
     layout, off = {}, 0

@@ -30,6 +30,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.analysis.diagnostics import raise_error
+
 from .network import UNKNOWN, BayesianNetwork, CategoricalRV, DirichletRV, Plate
 
 
@@ -48,14 +50,16 @@ class ModelBuilder:
     def plate(self, size, name: Optional[str] = None, within: Optional[Plate] = None) -> Plate:
         self._line()
         if size != UNKNOWN and (not isinstance(size, int) or size <= 0):
-            raise ValueError(f"plate size must be positive int or '?', got {size!r}")
+            raise_error("bad-plate-size", name or f"plate{len(self.net.plates)}",
+                        f"plate size must be positive int or '?', got {size!r}")
         name = name or f"plate{len(self.net.plates)}"
         return self.net.add_plate(name, size, within)
 
     def dirichlet(self, name: str, conc, dim: int, plate: Optional[Plate] = None) -> DirichletRV:
         self._line()
         if dim < 2:
-            raise ValueError("dirichlet dim must be >= 2")
+            raise_error("bad-dim", name, f"{name}: dirichlet dim must be >= 2",
+                        hint="Beta is dim=2; use m.beta() for that")
         rv = DirichletRV(name, plate or self.net.toplevel, dim, conc)
         return self.net.add_rv(rv)
 
@@ -139,7 +143,10 @@ class Model:
             if segment_ids.shape != values.shape:
                 raise ValueError("segment_ids must align with values")
         if (values < 0).any() or (values >= rv.dim).any():
-            raise ValueError(f"{name}: observed values out of range [0, {rv.dim})")
+            raise_error("value-range", name,
+                        f"{name}: observed values out of range [0, {rv.dim})",
+                        hint="category indices must fit the parent "
+                             "Dirichlet's dim (vocab size)")
         rv.observed = True
         self.observations[name] = {"values": values, "segment_ids": segment_ids}
         self._program = None      # metadata changed; force re-compile

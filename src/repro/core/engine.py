@@ -74,6 +74,10 @@ class EngineConfig:
     # gibbs
     burnin: Optional[int] = None    # default: steps // 2
     thin: int = 1
+    # static analysis (see docs/static_analysis.md)
+    validate: bool = False          # run repro.analysis pre-flight checks
+                                    # before fitting; raises PreflightError
+                                    # listing every error-severity finding
 
 
 @dataclasses.dataclass
@@ -130,6 +134,21 @@ class InferenceEngine:
     def fit(self, model) -> InferenceResult:
         raise NotImplementedError
 
+    def _preflight(self, model):
+        """Opt-in static analysis (``cfg.validate=True``): raise
+        ``PreflightError`` with every error finding before any device
+        work starts, and audit the config for retrace hazards."""
+        if not self.cfg.validate:
+            return
+        from repro.analysis.audit import audit_config
+        from repro.analysis.validate import PreflightError, preflight
+        diags = preflight(model)
+        n_docs = self.cfg.corpus.n_docs if self.cfg.corpus is not None \
+            else None
+        diags += audit_config(self.cfg, n_docs=n_docs)
+        if any(d.severity == "error" for d in diags):
+            raise PreflightError(diags)
+
 
 class VMPEngine(InferenceEngine):
     """Full-batch VMP.  With ``holdout_frac > 0`` the held-out groups are
@@ -145,6 +164,7 @@ class VMPEngine(InferenceEngine):
             raise ValueError(
                 "full-batch VMP touches every token each step and needs a "
                 "resident corpus; use backend='svi' with corpus=")
+        self._preflight(model)
         if cfg.holdout_frac > 0:
             return _fit_svi(model, cfg, full_batch=True)
         # every backend fits fresh: a model inferred before must not
@@ -170,6 +190,7 @@ class SVIEngine(InferenceEngine):
     name = "svi"
 
     def fit(self, model) -> InferenceResult:
+        self._preflight(model)
         return _fit_svi(model, self.cfg, full_batch=False)
 
 
@@ -256,6 +277,7 @@ class GibbsEngine(InferenceEngine):
         if cfg.corpus is not None:
             raise ValueError("gibbs sweeps every token and needs a resident "
                              "corpus; use backend='svi' with corpus=")
+        self._preflight(model)
         program: VMPProgram = model.compile()
         spec, child = _lda_shape(program)
         theta_d = program.dirichlets[spec.prior_dir]

@@ -16,6 +16,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
+from repro.analysis.diagnostics import raise_error, raise_unsupported
+
 UNKNOWN = "?"
 
 
@@ -43,6 +45,11 @@ class Plate:
                 return True
             p = p.parent
         return False
+
+    def path(self) -> str:
+        """Human-readable plate path, outermost first (``docs/sents/tokens``)
+        — names *where* an RV lives in diagnostics."""
+        return "/".join(p.name for p in self.chain()) or "TOPLEVEL"
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"Plate({self.name}, size={self.size}, flat={self.flat_size})"
@@ -113,7 +120,9 @@ class BayesianNetwork:
 
     def add_rv(self, rv: RV) -> RV:
         if rv.name in self.rvs:
-            raise ValueError(f"duplicate random variable {rv.name!r}")
+            raise_error("duplicate-rv", rv.name,
+                        f"duplicate random variable {rv.name!r}",
+                        hint="every RV needs a unique name")
         self.rvs[rv.name] = rv
         return rv
 
@@ -132,26 +141,44 @@ class BayesianNetwork:
                 # the latent selector resolves exactly one plate of the parent
                 sel_used = True
                 if plate.size != UNKNOWN and rv.selector.dim != plate.size:
-                    raise ValueError(
+                    raise_error(
+                        "selector-dim-mismatch", f"{rv.name}->{rv.parent.name}",
                         f"{rv.name}: selector {rv.selector.name} has dim "
                         f"{rv.selector.dim} but parent plate {plate.name} has "
-                        f"size {plate.size}")
+                        f"size {plate.size}",
+                        hint=f"give {rv.selector.name} dim {plate.size} or "
+                             f"resize plate {plate.name}")
                 if not rv.selector.plate.is_ancestor_of(rv.plate) \
                         and rv.selector.plate is not rv.plate:
-                    raise ValueError(
-                        f"{rv.name}: selector {rv.selector.name} must live on "
-                        f"the same plate or an ancestor plate")
+                    raise_error(
+                        "selector-plate", f"{rv.name}->{rv.selector.name}",
+                        f"{rv.name} (plate {rv.plate.path()}): selector "
+                        f"{rv.selector.name} (plate {rv.selector.plate.path()})"
+                        f" must live on the same plate or an ancestor plate",
+                        hint="move the selector onto the child's plate chain")
                 continue
-            raise ValueError(
-                f"{rv.name}: cannot resolve parent plate {plate.name}; the "
-                f"supported class is mixtures of Categoricals with "
-                f"Dirichlet priors (paper section 8)")
+            raise_error(
+                "unsupported-edge", f"{rv.name}->{rv.parent.name}",
+                f"{rv.name} (plate {rv.plate.path()}): cannot resolve parent "
+                f"plate {plate.name}; the supported class is mixtures of "
+                f"Categoricals with Dirichlet priors (paper section 8)",
+                hint="the plate must be an ancestor of the child or indexed "
+                     "by its (single) latent selector")
         if rv.selector is not None:
             if rv.selector.observed:
-                raise ValueError(f"{rv.name}: selector must be latent")
+                raise_error(
+                    "selector-observed", f"{rv.name}->{rv.selector.name}",
+                    f"{rv.name}: selector must be latent",
+                    hint=f"unobserve {rv.selector.name} or use a static "
+                         f"row index instead of a selector")
             if rv.selector.selector is not None:
-                raise NotImplementedError(
-                    "chained latent selectors are outside the supported class")
+                raise_unsupported(
+                    "chained-selector", f"{rv.name}->{rv.selector.name}",
+                    f"{rv.name} (plate {rv.plate.path()}): selector "
+                    f"{rv.selector.name} itself has selector "
+                    f"{rv.selector.selector.name} — chained latent selectors "
+                    f"are outside the supported class",
+                    hint="collapse the chain into one selector per child")
 
     def latent_categoricals(self) -> list[CategoricalRV]:
         return [r for r in self.rvs.values()

@@ -584,9 +584,22 @@ class SVI:
     """
 
     def __init__(self, program, config: SVIConfig = None, plan=None,
-                 corpus=None, hosts=None):
+                 corpus=None, hosts=None, validate=False):
         from repro.data.pipeline import MinibatchSampler, holdout_split
         self.cfg = config or SVIConfig()
+        if validate:
+            # opt-in pre-flight: structural diagnostics + retrace-hazard
+            # audit, before any template/device work (docs/static_analysis.md)
+            from repro.analysis.audit import audit_config
+            from repro.analysis.validate import PreflightError, preflight
+            diags = list(preflight(program)) if not isinstance(
+                program, VMPProgram) else []
+            diags += audit_config(
+                self.cfg, n_docs=corpus.n_docs if corpus is not None
+                else None,
+                n_hosts=hosts.n_hosts if hosts is not None else None)
+            if any(d.severity == "error" for d in diags):
+                raise PreflightError(diags)
         self.plan = plan
         self.corpus = corpus
         self.hosts = hosts

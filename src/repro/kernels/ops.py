@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import functools
 import os
+from typing import NamedTuple, Optional
 
 import jax
 
@@ -80,6 +81,116 @@ def zstep(logits: jax.Array):
     return _zstep_pallas(logits, interpret=(b == "pallas_interpret"))
 
 
+class RouteInfo(NamedTuple):
+    """The kernel-routing decision for one :func:`zstats` call, as pure
+    metadata.  ``path`` is what will run:
+
+      - ``"ref"``           — the chunked pure-jnp oracle,
+      - ``"fused"``         — the fused Pallas kernel, all tables
+                              VMEM-resident,
+      - ``"fused-streamed"``— the fused kernel with one over-budget table
+                              tiled HBM -> VMEM (``target``/``tile``/
+                              ``n_tiles`` describe the streaming layout),
+      - ``"fused-zmap"``    — the two-phase segment-latent kernel.
+
+    ``table_bytes`` is the padded-f32 resident footprint the budget check
+    compared against ``budget`` (``_TABLE_BUDGET``); ``table_dtype`` records
+    the bf16-table mode; ``block_tokens`` the grid block size (0 when not
+    applicable); ``reason`` says why this path was chosen in one sentence.
+    """
+    path: str
+    backend: str
+    tables: str
+    table_dtype: str
+    target: object
+    tile: int
+    n_tiles: int
+    block_tokens: int
+    table_bytes: int
+    budget: int
+    reason: str
+
+
+def _table_bytes(table_prior, children, tables: str,
+                 n_latent: Optional[int]) -> int:
+    """Padded resident footprint (tables + accumulators [+ Elog scratch])
+    in f32 bytes — the quantity the fused kernels' budget checks compare to
+    ``_TABLE_BUDGET``, via the same padding arithmetic."""
+    from .fused_zstats import _LANE, _pad_to
+    k = table_prior.shape[1]
+    kp = _pad_to(max(k, 1), _LANE)
+    gpp = _pad_to(max(table_prior.shape[0], 1), _LANE)
+    factor = 3 if tables == "alpha" else 2
+    byt = factor * 4 * gpp * kp
+    for c in children:
+        gf, kf = c.elog.shape
+        gfp = kp if c.specialized else _pad_to(max(gf, 1), _LANE)
+        byt += factor * 4 * gfp * _pad_to(max(kf, 1), _LANE)
+    if n_latent is not None and any(c.zmap is not None for c in children):
+        byt += 4 * 4 * _pad_to(max(n_latent, 1), _LANE) * kp
+    return byt
+
+
+def routing(table_prior, prior_rows=None, children=(), *,
+            tables: str = "elog", backend: Optional[str] = None,
+            n_latent: Optional[int] = None) -> RouteInfo:
+    """Predict which kernel :func:`zstats` will dispatch to — without
+    touching any backend or device state.
+
+    Arguments mirror :func:`zstats`, but only *shapes* are read:
+    ``table_prior`` and each child's ``elog`` may be real arrays,
+    ``jax.ShapeDtypeStruct`` stand-ins, or anything with ``.shape`` (and
+    optionally ``.dtype``); ``prior_rows`` supplies ``n_latent`` via its
+    leading dim (or pass ``n_latent=`` directly and ``prior_rows=None``).
+    The decision is computed by the *same* planner the kernels use
+    (``fused_zstats._plan`` / ``fused_zmap.fusable_zmap``), and
+    :func:`zstats` asserts agreement at trace time, so this function and
+    the dispatch can never drift.  ``backend`` defaults to this process's
+    :func:`_backend` answer; pass ``"pallas"`` to plan for TPU from
+    anywhere.
+    """
+    from .fused_zmap import fusable_zmap
+    from .fused_zstats import _TABLE_BUDGET, _plan
+
+    b = backend if backend is not None else _backend()
+    if n_latent is None and prior_rows is not None:
+        n_latent = int(prior_rows.shape[0])
+    dtype = str(getattr(table_prior, "dtype", "float32"))
+    byt = _table_bytes(table_prior, children, tables, n_latent)
+
+    def _route(path, target=None, tile=0, n_tiles=1, bn=0, reason=""):
+        return RouteInfo(path, b, tables, dtype, target, tile, n_tiles,
+                         bn, byt, _TABLE_BUDGET, reason)
+
+    if b == "ref":
+        return _route("ref", reason="ref backend: pure-jnp oracles "
+                      "(CPU/GPU default)")
+    if any(c.zmap is not None for c in children):
+        if fusable_zmap(table_prior, children, tables, n_latent=n_latent):
+            return _route("fused-zmap",
+                          reason="segment latent (zmap child); tables + "
+                                 "(n_latent, K) logits fit VMEM")
+        return _route("ref",
+                      reason="segment latent whose tables + logits exceed "
+                             "the VMEM table budget; chunked oracle"
+                      if n_latent is not None else
+                      "segment latent with unknown n_latent; chunked oracle")
+    plan = _plan(table_prior, children, tables)
+    if plan is None:
+        return _route("ref",
+                      reason="not fusable: more than one over-budget table, "
+                             "or only strided tables over budget; chunked "
+                             "oracle")
+    if plan.target is None:
+        return _route("fused", bn=plan.bn,
+                      reason="all tables VMEM-resident")
+    return _route("fused-streamed", target=plan.target, tile=plan.tl,
+                  n_tiles=plan.n_tiles, bn=plan.bn,
+                  reason=f"table over the VMEM budget; streaming "
+                         f"{'prior rows' if plan.target == 'prior' else 'child %d values' % plan.target}"
+                         f" in {plan.n_tiles} tiles of {plan.tl}")
+
+
 def host_bucketing(table_prior, prior_rows, children, *,
                    tables: str = "elog"):
     """Precompute the streamed-table token bucketing for a :func:`zstats`
@@ -137,19 +248,26 @@ def zstats(table_prior: jax.Array, prior_rows: jax.Array, children: tuple,
     b = _backend()
     if b != "ref":
         interp = b == "pallas_interpret"
+        # trace-time cross-check: the pure routing() prediction must agree
+        # with the dispatch below (the EXPLAIN plan's accuracy contract)
+        route = routing(table_prior, prior_rows, children, tables=tables,
+                        backend=b)
         if any(c.zmap is not None for c in children):
             from .fused_zmap import fusable_zmap, zstats_zmap
             if fusable_zmap(table_prior, children, tables,
                             n_latent=prior_rows.shape[0]):
+                assert route.path == "fused-zmap", route
                 return zstats_zmap(table_prior, prior_rows, children,
                                    zmask, tables=tables, interpret=interp)
         else:
             from .fused_zstats import fusable, zstats as _zstats_pallas
             if fusable(table_prior, children, tables):
+                assert route.path in ("fused", "fused-streamed"), route
                 return _zstats_pallas(table_prior, prior_rows, children,
                                       zmask, tables=tables,
                                       interpret=interp,
                                       bucketing=bucketing)
+        assert route.path == "ref", route
     return ref.zstats(table_prior, prior_rows, children, zmask,
                       tables=tables)
 
@@ -167,5 +285,6 @@ def flash_attention(q, k, v, *, causal: bool = True):
                       interpret=(b == "pallas_interpret"))
 
 
-__all__ = ["ZChild", "dirichlet_expectation", "host_bucketing", "zstep",
-           "zstats", "flash_attention", "reset_backend_cache"]
+__all__ = ["ZChild", "RouteInfo", "routing", "dirichlet_expectation",
+           "host_bucketing", "zstep", "zstats", "flash_attention",
+           "reset_backend_cache"]

@@ -1,0 +1,238 @@
+"""Unit tests for ``scripts/lint_concurrency.py``: every rule with a
+positive (violating) and negative (conforming) snippet, the suppression
+syntax, and the guarantee that the current tree is clean (what CI runs).
+"""
+
+import importlib.util
+import os
+import sys
+import textwrap
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def lint():
+    spec = importlib.util.spec_from_file_location(
+        "lint_concurrency", os.path.join(_ROOT, "scripts",
+                                         "lint_concurrency.py"))
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _codes(lint, src):
+    return [f.code for f in lint.lint_source(textwrap.dedent(src))]
+
+
+# ---------------------------------------------------------------------------
+# CL001: mmap cache under the reader lock
+# ---------------------------------------------------------------------------
+
+def test_cl001_positive(lint):
+    assert _codes(lint, """
+        class C:
+            def read(self, sid):
+                return self._mmaps.get(sid)
+    """) == ["CL001"]
+
+
+def test_cl001_negative_under_lock(lint):
+    assert _codes(lint, """
+        class C:
+            def read(self, sid):
+                with self._lock:
+                    return self._mmaps.get(sid)
+    """) == []
+
+
+def test_cl001_negative_init_exempt(lint):
+    assert _codes(lint, """
+        class C:
+            def __init__(self):
+                self._mmaps = {}
+    """) == []
+
+
+def test_cl001_nested_def_not_covered(lint):
+    # the closure runs later on another thread: the enclosing `with`
+    # does not protect it
+    assert _codes(lint, """
+        class C:
+            def start(self):
+                with self._lock:
+                    def cb():
+                        return self._mmaps.get(0)
+    """) == ["CL001"]
+
+
+# ---------------------------------------------------------------------------
+# CL002: lengths os.replace strictly before manifest os.replace
+# ---------------------------------------------------------------------------
+
+def test_cl002_positive(lint):
+    assert _codes(lint, """
+        import os
+        def commit(path):
+            os.replace("m.tmp", path + "/manifest.json")
+            os.replace("l.tmp", path + "/lengths.npy")
+    """) == ["CL002"]
+
+
+def test_cl002_negative_correct_order(lint):
+    assert _codes(lint, """
+        import os
+        def commit(path):
+            os.replace("l.tmp", path + "/lengths.npy")
+            os.replace("m.tmp", path + "/manifest.json")
+    """) == []
+
+
+def test_cl002_negative_manifest_only(lint):
+    # a manifest-only update has no ordering obligation
+    assert _codes(lint, """
+        import os
+        def retag(path):
+            os.replace("m.tmp", path + "/manifest.json")
+    """) == []
+
+
+def test_cl002_matches_symbolic_destinations(lint):
+    # store.py uses os.path.join(self.path, _LENGTHS) — names, not literals
+    assert _codes(lint, """
+        import os
+        def commit(self):
+            os.replace(mtmp, os.path.join(self.path, _MANIFEST))
+            os.replace(ltmp, os.path.join(self.path, _LENGTHS))
+    """) == ["CL002"]
+
+
+# ---------------------------------------------------------------------------
+# CL003: thread join under lock
+# ---------------------------------------------------------------------------
+
+def test_cl003_positive(lint):
+    assert _codes(lint, """
+        class C:
+            def close(self):
+                with self._lock:
+                    self._thread.join()
+    """) == ["CL003"]
+
+
+def test_cl003_negative_join_outside(lint):
+    assert _codes(lint, """
+        class C:
+            def close(self):
+                with self._lock:
+                    t = self._thread
+                t.join(1.0)
+    """) == []
+
+
+def test_cl003_negative_string_join(lint):
+    assert _codes(lint, """
+        import os
+        class C:
+            def render(self):
+                with self._lock:
+                    a = "/".join(["x", "y"])
+                    b = os.path.join("x", "y")
+                    c = os.sep.join(["x", "y"])
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# CL004: sleep under lock
+# ---------------------------------------------------------------------------
+
+def test_cl004_positive(lint):
+    assert _codes(lint, """
+        import time
+        class C:
+            def poll(self):
+                with self._refresh_lock:
+                    time.sleep(0.1)
+    """) == ["CL004"]
+
+
+def test_cl004_negative(lint):
+    assert _codes(lint, """
+        import time
+        class C:
+            def poll(self):
+                with self._lock:
+                    due = self._due
+                if due:
+                    time.sleep(0.1)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_suppression_with_justification(lint):
+    assert _codes(lint, """
+        class C:
+            def warm(self, sid):
+                return self._mmaps.get(sid)  # lint: disable=CL001 — warm() runs before threads start
+    """) == []
+
+
+def test_suppression_requires_justification(lint):
+    out = lint.lint_source(textwrap.dedent("""
+        class C:
+            def warm(self, sid):
+                return self._mmaps.get(sid)  # lint: disable=CL001
+    """))
+    assert [f.code for f in out] == ["CL000"]
+    assert "justification" in out[0].message
+
+
+def test_suppression_unknown_rule_does_not_suppress(lint):
+    out = lint.lint_source(textwrap.dedent("""
+        class C:
+            def warm(self, sid):
+                return self._mmaps.get(sid)  # lint: disable=CL999 — nope
+    """))
+    assert sorted(f.code for f in out) == ["CL000", "CL001"]
+
+
+def test_suppression_only_covers_named_rule(lint):
+    out = lint.lint_source(textwrap.dedent("""
+        import time
+        class C:
+            def close(self):
+                with self._lock:
+                    self._thread.join(); time.sleep(1)  # lint: disable=CL003 — closer owns the lock here
+    """))
+    assert [f.code for f in out] == ["CL004"]
+
+
+# ---------------------------------------------------------------------------
+# the tree itself is clean (the CI contract)
+# ---------------------------------------------------------------------------
+
+def test_default_files_clean(lint):
+    files = [os.path.join(_ROOT, p) for p in lint.DEFAULT_PATHS]
+    assert all(os.path.exists(f) for f in files)
+    assert lint.lint_paths(files) == []
+
+
+def test_whole_src_tree_clean(lint):
+    assert lint.lint_paths([os.path.join(_ROOT, "src")]) == []
+
+
+def test_cli_exit_codes(lint, tmp_path, capsys):
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert lint.main([str(good)]) == 0
+    bad = tmp_path / "bad.py"
+    bad.write_text("class C:\n    def r(self):\n"
+                   "        return self._mmaps\n")
+    assert lint.main([str(tmp_path)]) == 1
+    assert "CL001" in capsys.readouterr().out
