@@ -1,0 +1,146 @@
+"""Gateway benchmark: mixed-tenant load over two artifacts, and the
+compacted-replica trade (size vs latency vs measured error).
+
+Protocol: fit a short SVI run, freeze the posterior, compact a replica
+(top-k + bf16, ``repro.gateway.compact``), register *both* under one
+:class:`~repro.gateway.Gateway`, then —
+
+  - **mixed-tenant load**: T tenant threads each run a mixed QL script
+    (TOPICS / SIMILARITY / CREDIBLE INTERVAL / PREDICT) against both
+    artifacts through the admission-controlled front door; reports
+    end-to-end us/query, windowed qps, and p95 latency from the
+    gateway's own stats tree (the accounting a deployment would watch);
+  - **compacted vs full**: the same statements against the full and the
+    compacted artifact — per-query-kind latency, artifact byte sizes
+    (``>= 4x`` smaller is the bar), the recorded worst-case
+    total-variation bound on the mean tables, and the realized PREDICT
+    per-token-ll deviation between the replicas (reported raw, next to
+    the bound).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import make_engine, models
+from repro.data import SyntheticCorpus
+from repro.gateway import Gateway, compact_posterior
+
+K, V = 16, 2000
+N_TENANTS = 4
+QUERIES_PER_TENANT = 24
+TOP_K = 128
+
+
+def _fit_posterior():
+    corpus = SyntheticCorpus(n_docs=400, vocab=V, n_topics=K,
+                             mean_len=100, seed=0).generate()
+    m = models.make("lda", alpha=0.1, beta=0.05, K=K, V=V)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    result = make_engine("svi", steps=25, batch_size=128, seed=0).fit(m)
+    return result.freeze(m), corpus
+
+
+def _docs(corpus, seed, n=3):
+    rng = np.random.default_rng(seed)
+    offs = np.concatenate([[0], np.cumsum(corpus["lengths"])])
+    picks = rng.integers(0, len(corpus["lengths"]), n)
+    vals = np.concatenate([corpus["tokens"][offs[i]:offs[i + 1]]
+                           for i in picks])
+    return {"values": vals, "lengths": corpus["lengths"][picks]}
+
+
+_SCRIPT = """
+    TOPICS OF phi TOP 10 USING ARTIFACT '{a}';
+    SIMILARITY BETWEEN phi[0] AND phi[1] USING hellinger
+        USING ARTIFACT '{a}';
+    CREDIBLE INTERVAL 0.9 FOR phi[0] USING ARTIFACT '{a}';
+    PREDICT LL FOR DOCS $batch USING ARTIFACT '{a}'
+"""
+
+
+def run(report) -> None:
+    post, corpus = _fit_posterior()
+    comp = compact_posterior(post, top_k=TOP_K)
+    report("gateway_compact_size", 0.0,
+           f"{comp.compression_ratio():.1f}x smaller",
+           bytes_full=comp.nbytes_full(),
+           bytes_compact=comp.nbytes_compact(),
+           error_bound=comp.error_bound)
+
+    with Gateway(max_delay_s=0.002) as gw:
+        gw.register("full", post, version="f0")
+        gw.register("lite", comp, version="l0")
+
+        # warm both artifacts' compiled buckets out of the measurement
+        for aid in ("full", "lite"):
+            gw.query(f"PREDICT LL FOR DOCS $batch USING ARTIFACT '{aid}'",
+                     params={"batch": _docs(corpus, 0)}, timeout_s=120)
+
+        # -- mixed-tenant load over both artifacts -------------------------
+        errors = []
+
+        def tenant_load(tenant, seed):
+            rng = np.random.default_rng(seed)
+            for i in range(QUERIES_PER_TENANT // 4):
+                aid = ("full", "lite")[int(rng.integers(2))]
+                try:
+                    gw.run_script(
+                        _SCRIPT.format(a=aid),
+                        params={"batch": _docs(corpus, seed * 97 + i)},
+                        tenant=tenant, timeout_s=120)
+                except Exception as e:            # pragma: no cover
+                    errors.append((tenant, repr(e)))
+
+        threads = [threading.Thread(target=tenant_load,
+                                    args=(f"tenant-{t}", t))
+                   for t in range(N_TENANTS)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        assert not errors, errors[:3]
+
+        stats = gw.stats()
+        total = sum(t["served"] for t in stats["tenants"].values())
+        p95 = max(t["latency_p95_ms"] for t in stats["tenants"].values())
+        occ = [a.get("batch_occupancy")
+               for a in stats["artifacts"].values()
+               if a.get("batch_occupancy")]
+        report("gateway_mixed_tenant_load", wall / total * 1e6,
+               f"{total / wall:.0f} qps, p95 {p95:.1f} ms",
+               tenants=N_TENANTS, queries=total,
+               p95_ms=round(p95, 2),
+               mean_batch_occupancy=(round(float(np.mean(occ)), 2)
+                                     if occ else None))
+
+        # -- compacted vs full, per query kind -----------------------------
+        lls = {}
+        for aid in ("full", "lite"):
+            for label, text in [
+                    ("topics", f"TOPICS OF phi TOP 10 "
+                               f"USING ARTIFACT '{aid}'"),
+                    ("predict", f"PREDICT LL FOR DOCS $batch "
+                                f"USING ARTIFACT '{aid}'")]:
+                reps, t0 = 20, time.perf_counter()
+                for i in range(reps):
+                    r = gw.query(text, params={"batch": _docs(corpus, i)},
+                                 timeout_s=120)
+                us = (time.perf_counter() - t0) / reps * 1e6
+                if label == "predict":
+                    lls[aid] = r.value["per_token_ll"]
+                extra = {}
+                if aid == "lite":
+                    extra["error_bound"] = r.error_bound
+                report(f"gateway_{label}_{aid}", us,
+                       f"served by {r.version}", **extra)
+        dev = abs(lls["lite"] - lls["full"])
+        report("gateway_predict_ll_deviation", 0.0,
+               f"|lite-full| = {dev:.4f} nats/token",
+               ll_full=round(lls["full"], 6), ll_lite=round(lls["lite"], 6),
+               error_bound=comp.error_bound)

@@ -26,6 +26,11 @@
                      2-virtual-host vs real 2-process (gloo) topologies —
                      us/step + tokens/s scaling and the per-host working
                      set (owned shards only)
+    bench_gateway    multi-tenant gateway: mixed QL load over two
+                     artifacts through admission control, and the
+                     compacted-replica trade (size ratio, per-kind
+                     latency, measured error bound vs realized PREDICT
+                     deviation)
 
 Prints ``name,us_per_call,derived`` CSV.  Select modules with
 ``python -m benchmarks.run [vmp|scaling|partition|kernels] ...``.
@@ -43,15 +48,16 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_multihost, bench_outofcore,
-                            bench_partition, bench_query, bench_recovery,
-                            bench_scaling, bench_streaming, bench_svi,
-                            bench_vmp)
+    from benchmarks import (bench_gateway, bench_kernels, bench_multihost,
+                            bench_outofcore, bench_partition, bench_query,
+                            bench_recovery, bench_scaling, bench_streaming,
+                            bench_svi, bench_vmp)
     mods = {"vmp": bench_vmp, "scaling": bench_scaling,
             "partition": bench_partition, "kernels": bench_kernels,
             "svi": bench_svi, "outofcore": bench_outofcore,
             "query": bench_query, "streaming": bench_streaming,
-            "recovery": bench_recovery, "multihost": bench_multihost}
+            "recovery": bench_recovery, "multihost": bench_multihost,
+            "gateway": bench_gateway}
     args = sys.argv[1:]
     json_mode = "--json" in args
     picks = [a for a in args if a in mods] or list(mods)

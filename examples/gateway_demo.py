@@ -1,0 +1,212 @@
+"""The multi-tenant serving gateway, end to end.
+
+    PYTHONPATH=src python examples/gateway_demo.py
+    PYTHONPATH=src python examples/gateway_demo.py --smoke   # CI-sized
+
+Fits an LDA and an SLDA model, freezes both posteriors, and stands up one
+:class:`~repro.gateway.Gateway` serving them side by side:
+
+  1. a QL script answers TOPICS / SIMILARITY / CREDIBLE INTERVAL /
+     PREDICT statements against either artifact by id;
+  2. ``EXPLAIN`` renders each statement's plan — and the demo *asserts*
+     the explained route equals the executed result's route;
+  3. the LDA artifact is compacted (top-k + bf16, >= 4x smaller) and
+     registered as a replica whose every answer carries the measured
+     error bound;
+  4. concurrent tenants hit the gateway under per-tenant token-bucket
+     quotas — the throttled one is rejected with a retry-after hint while
+     the others are served — and the per-tenant/per-artifact stats tree
+     is printed.
+
+See docs/query_serving.md for the grammar and the routing contract.
+"""
+
+import argparse
+import threading
+
+import numpy as np
+
+from repro.core import make_engine, models
+from repro.data import SyntheticCorpus
+from repro.gateway import (Gateway, QuotaExceededError, TenantQuota,
+                           compact_posterior)
+
+
+def fit_lda(vocab, n_docs, steps):
+    corpus = SyntheticCorpus(n_docs=n_docs, vocab=vocab, n_topics=4,
+                             mean_len=80, seed=0).generate()
+    m = models.make("lda", alpha=0.1, beta=0.05, K=4, V=vocab)
+    m["x"].observe(corpus["tokens"], segment_ids=corpus["doc_ids"])
+    result = make_engine("svi", steps=steps, batch_size=32, seed=0).fit(m)
+    return result.freeze(m), corpus
+
+
+def fit_slda(steps):
+    corpus = SyntheticCorpus(n_docs=30, vocab=60, n_topics=3, mean_len=60,
+                             seed=1).generate()
+    toks, doc_ids = corpus["tokens"], corpus["doc_ids"]
+    sent_ids = np.zeros_like(doc_ids)        # ~3 sentences per document
+    doc_of_sent, sid = [], -1
+    rng = np.random.default_rng(0)
+    for d in np.unique(doc_ids):
+        mask = doc_ids == d
+        cuts = np.sort(rng.choice(np.arange(1, mask.sum()), 2,
+                                  replace=False))
+        local = np.zeros(mask.sum(), int)
+        local[cuts[0]:] = 1
+        local[cuts[1]:] = 2
+        sent_ids[mask] = local + sid + 1
+        sid += 3
+        doc_of_sent += [d] * 3
+    m = models.make("slda", alpha=0.1, beta=0.05, K=3, V=60)
+    m["x"].observe(toks, segment_ids=sent_ids)
+    m.bind("sents", np.asarray(doc_of_sent))
+    result = make_engine("svi", steps=steps, batch_size=32, seed=0).fit(m)
+    return result.freeze(m), corpus
+
+
+def docs_payload(corpus, seed, n=3):
+    rng = np.random.default_rng(seed)
+    offs = np.concatenate([[0], np.cumsum(corpus["lengths"])])
+    picks = rng.integers(0, len(corpus["lengths"]), n)
+    return {"values": np.concatenate(
+                [corpus["tokens"][offs[i]:offs[i + 1]] for i in picks]),
+            "lengths": corpus["lengths"][picks]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: tiny fits, few queries")
+    ap.add_argument("--vocab", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    args = ap.parse_args()
+    vocab = args.vocab or (400 if args.smoke else 1200)
+    steps = args.iters or (8 if args.smoke else 40)
+
+    print("[gateway] fitting LDA and SLDA artifacts "
+          f"(V={vocab}, steps={steps}) ...")
+    lda_post, lda_corpus = fit_lda(vocab, 60 if args.smoke else 200, steps)
+    slda_post, slda_corpus = fit_slda(max(6, steps // 2))
+
+    with Gateway(max_delay_s=0.002) as gw:
+        gw.register("lda-v7", lda_post, version="lda-7.0")
+        gw.register("slda-v1", slda_post, version="slda-1.0")
+
+        # -- 1. the QL script --------------------------------------------
+        batch = docs_payload(lda_corpus, seed=3)
+        script = """
+            -- the serving dashboard, in four statements
+            TOPICS OF phi TOP 5 USING ARTIFACT 'lda-v7';
+            SIMILARITY BETWEEN phi[0] AND phi[2] USING hellinger
+                USING ARTIFACT 'lda-v7';
+            CREDIBLE INTERVAL 0.9 FOR phi[1] USING ARTIFACT 'lda-v7';
+            PREDICT LL FOR DOCS $batch USING ARTIFACT 'lda-v7'
+        """
+        print("[gateway] running QL script as tenant 'analyst':")
+        for r in gw.run_script(script, params={"batch": batch},
+                               tenant="analyst", timeout_s=120):
+            if r.kind == "topics":
+                print(f"  topics({r.version}): top words per topic =\n    "
+                      + "\n    ".join(map(str, r.value["indices"])))
+            elif r.kind == "similarity":
+                print(f"  similarity{r.value['pair']} "
+                      f"[{r.value['metric']}] = "
+                      f"{r.value['similarity']:.4f}")
+            elif r.kind == "credible":
+                w = int(np.argmax(r.value["hi"]))
+                print(f"  credible 90% CI of phi[1]'s top word {w}: "
+                      f"[{r.value['lo'][w]:.4f}, {r.value['hi'][w]:.4f}]")
+            elif r.kind == "predict":
+                print(f"  predict: {r.value['n_docs']} docs, "
+                      f"ll/token {r.value['per_token_ll']:.4f} "
+                      f"(batch of {r.value['batch_docs']}, {r.version})")
+
+        # an SLDA PREDICT rides the direct fold-in path (nested plates)
+        sl = {"values": slda_corpus["tokens"][:30],
+              "segment_ids": np.repeat([0, 1], 15),
+              "bindings": {"sents": [0, 0]}}
+        r = gw.query("PREDICT LL FOR DOCS $sl USING ARTIFACT 'slda-v1'",
+                     params={"sl": sl}, tenant="analyst")
+        print(f"  slda predict: ll/token {r.value['per_token_ll']:.4f} "
+              f"via {r.route.split('·')[-1].strip()}")
+
+        # -- 2. EXPLAIN matches the executed route ------------------------
+        print("[gateway] EXPLAIN vs executed route:")
+        for text, params in [
+                ("TOPICS OF phi TOP 5 USING ARTIFACT 'lda-v7'", None),
+                ("PREDICT LL FOR DOCS $batch USING ARTIFACT 'lda-v7'",
+                 {"batch": batch}),
+                ("PREDICT LL FOR DOCS $sl USING ARTIFACT 'slda-v1'",
+                 {"sl": sl})]:
+            ex = gw.query(f"EXPLAIN {text}", params=params)
+            ran = gw.query(text, params=params, timeout_s=120)
+            assert ex.route == ran.route, (ex.route, ran.route)
+            print(f"  OK  {ran.route}")
+        print("[gateway] full EXPLAIN of the fold-in query:")
+        print("\n".join("    " + ln for ln in
+                        gw.explain("PREDICT LL FOR DOCS $batch USING "
+                                   "ARTIFACT 'lda-v7'",
+                                   params={"batch": batch}).splitlines()))
+
+        # -- 3. compacted replica -----------------------------------------
+        comp = compact_posterior(lda_post, top_k=32)
+        ratio = comp.compression_ratio()
+        print(f"[gateway] compacted replica: {ratio:.1f}x smaller "
+              f"({comp.nbytes_full()} -> {comp.nbytes_compact()} bytes), "
+              f"worst-row tv error {comp.error_bound:.4f}")
+        assert ratio >= 4.0, "compaction must be >= 4x"
+        gw.register("lda-lite", comp, version="lda-7.0-lite")
+        rl = gw.query("TOPICS OF phi TOP 5 USING ARTIFACT 'lda-lite'")
+        rf = gw.query("TOPICS OF phi TOP 5 USING ARTIFACT 'lda-v7'")
+        agree = (rl.value["indices"][:, 0] == rf.value["indices"][:, 0])
+        print(f"  lite topics served with error_bound="
+              f"{rl.error_bound:.4f}; top-word agreement with full: "
+              f"{int(agree.sum())}/{len(agree)}")
+
+        # -- 4. concurrent tenants under quota ----------------------------
+        n_each = 4 if args.smoke else 12
+        gw.set_quota("scraper", TenantQuota(rate=0.5, burst=2.0))
+        outcomes = {}
+
+        def tenant(name):
+            served = rejected = 0
+            for i in range(n_each):
+                aid = ("lda-v7", "lda-lite")[i % 2]
+                try:
+                    gw.query(f"TOPICS OF phi TOP 3 USING ARTIFACT '{aid}'",
+                             tenant=name)
+                    served += 1
+                except QuotaExceededError:
+                    rejected += 1
+            outcomes[name] = (served, rejected)
+
+        threads = [threading.Thread(target=tenant, args=(n,))
+                   for n in ("alice", "bob", "scraper")]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for name, (served, rejected) in sorted(outcomes.items()):
+            print(f"  tenant {name:8s}: served={served} rejected={rejected}")
+        assert outcomes["alice"] == (n_each, 0)
+        assert outcomes["scraper"][1] > 0, "quota should have throttled"
+
+        stats = gw.stats()
+        print("[gateway] stats tree:")
+        for tname, t in stats["tenants"].items():
+            print(f"  tenant {tname:8s}: served={t['served']:3d} "
+                  f"rejected={t['rejected']:2d} "
+                  f"p95={t['latency_p95_ms']:8.2f} ms")
+        for aid, a in stats["artifacts"].items():
+            srv = a.get("server", {})
+            print(f"  artifact {aid:9s}: version={srv.get('version')} "
+                  f"requests={srv.get('requests')} "
+                  f"buckets={srv.get('compiled_buckets')} "
+                  f"evictions={srv.get('bucket_evictions')}")
+    print("[gateway] done: 2 models + 1 compacted replica, 4 query kinds, "
+          "EXPLAIN == executed route, quotas enforced")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,6 +54,20 @@ _MANIFEST_KEY = "__manifest__"
 _FILE_RE = re.compile(r"^step_(\d{10})\.npz$")
 _TMP_COUNT = itertools.count()
 
+#: dtypes npz cannot serialize (numpy loads them back as raw void bytes):
+#: stored as an integer bitcast of the same width, recorded per leaf as
+#: ``stored_as`` in the manifest so :func:`_assemble` restores the logical
+#: dtype exactly.  The compacted-posterior artifact format
+#: (``repro/gateway/compact.py``) keeps its bf16 tables this way.
+_ENCODED_DTYPES = {"bfloat16": "uint16"}
+
+
+def _logical_dtype(name: str) -> np.dtype:
+    if name == "bfloat16":
+        import ml_dtypes                      # ships with jax
+        return np.dtype(ml_dtypes.bfloat16)
+    raise ValueError(f"unknown encoded leaf dtype {name!r}")  # pragma: no cover
+
 
 class CheckpointCorruptError(RuntimeError):
     """A checkpoint failed validation; ``problems`` itemizes the damage."""
@@ -122,10 +136,17 @@ def save(directory: str, step: int, tree, meta: dict | None = None) -> str:
     arrays, records = {}, []
     for i, (leaf, path) in enumerate(zip(leaves, paths)):
         name = f"leaf_{i:05d}"
+        rec = {"name": name, "path": path,
+               "shape": list(leaf.shape), "dtype": str(leaf.dtype)}
+        stored_as = _ENCODED_DTYPES.get(str(leaf.dtype))
+        if stored_as is not None:
+            # bitcast, not convert: the bytes (and so the crc) are the
+            # logical leaf's bytes exactly
+            leaf = leaf.view(np.dtype(stored_as))
+            rec["stored_as"] = stored_as
+        rec["crc32"] = zlib.crc32(leaf.tobytes())
         arrays[name] = leaf
-        records.append({"name": name, "path": path,
-                        "shape": list(leaf.shape), "dtype": str(leaf.dtype),
-                        "crc32": zlib.crc32(leaf.tobytes())})
+        records.append(rec)
     manifest = {"format": FORMAT, "version": VERSION, "step": int(step),
                 "n_leaves": len(leaves), "treedef": str(treedef),
                 "dict_tree": bool(dict_tree), "leaves": records,
@@ -181,14 +202,15 @@ def validate(path: str) -> dict:
                     problems.append(f"leaf {rec['path']!r}: entry missing")
                     continue
                 arr = data[rec["name"]]
+                expect_dtype = rec.get("stored_as", rec["dtype"])
                 if list(arr.shape) != list(rec["shape"]):
                     problems.append(
                         f"leaf {rec['path']!r}: shape {list(arr.shape)} != "
                         f"manifest {rec['shape']}")
-                elif str(arr.dtype) != rec["dtype"]:
+                elif str(arr.dtype) != expect_dtype:
                     problems.append(
                         f"leaf {rec['path']!r}: dtype {arr.dtype} != "
-                        f"manifest {rec['dtype']}")
+                        f"manifest {expect_dtype}")
                 elif zlib.crc32(np.ascontiguousarray(arr).tobytes()) \
                         != rec["crc32"]:
                     problems.append(f"leaf {rec['path']!r}: checksum mismatch")
@@ -233,7 +255,9 @@ def latest_valid_step(directory: str) -> int | None:
 
 def _assemble(path: str, manifest: dict, tree_like):
     with np.load(path) as data:
-        leaves = [data[rec["name"]] for rec in manifest["leaves"]]
+        leaves = [data[rec["name"]] if "stored_as" not in rec
+                  else data[rec["name"]].view(_logical_dtype(rec["dtype"]))
+                  for rec in manifest["leaves"]]
     if tree_like is not None:
         _, treedef = jax.tree_util.tree_flatten(tree_like)
         if treedef.num_leaves != len(leaves):

@@ -1,0 +1,28 @@
+"""Multi-tenant serving gateway with a declarative statistical query
+language.
+
+One gateway process hosts many versioned posterior artifacts
+(``registry``), meters tenants with token-bucket quotas (``admission``),
+answers a small SQL-flavored query language (``ql`` -> ``plan``) —
+``TOPICS OF phi TOP 5``, ``SIMILARITY BETWEEN phi[0] AND phi[2] USING
+hellinger``, ``CREDIBLE INTERVAL 0.9 FOR theta[3]``, ``PREDICT LL FOR
+DOCS $batch USING ARTIFACT 'lda-v7'``, plus ``EXPLAIN`` — and serves
+compacted (bf16 + top-k, measured-error) artifact replicas (``compact``).
+See ``docs/query_serving.md``.
+"""
+
+from repro.gateway.admission import (AdmissionController, QuotaExceededError,
+                                     TenantQuota, TokenBucket)
+from repro.gateway.compact import (CompactedPosterior, compact_posterior,
+                                   load_compacted)
+from repro.gateway.gateway import Gateway
+from repro.gateway.plan import GatewayResult
+from repro.gateway.ql import QLSyntaxError, parse, parse_script
+from repro.gateway.registry import (ArtifactEntry, ArtifactRegistry,
+                                    UnknownArtifactError)
+
+__all__ = ["Gateway", "GatewayResult", "ArtifactRegistry", "ArtifactEntry",
+           "UnknownArtifactError", "AdmissionController", "TenantQuota",
+           "TokenBucket", "QuotaExceededError", "CompactedPosterior",
+           "compact_posterior", "load_compacted", "parse", "parse_script",
+           "QLSyntaxError"]

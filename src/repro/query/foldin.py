@@ -28,14 +28,65 @@ no re-tracing, no re-compiling.
 
 from __future__ import annotations
 
+import collections
 import copy
 import dataclasses
 import math
+import threading
 from typing import Optional
 
 import numpy as np
 
 from .posterior import Posterior
+
+
+class _BucketCache:
+    """Bounded LRU of compiled bucket scorers.
+
+    Shared by reference across :meth:`FoldIn.with_posterior` generations
+    (scorers are shape-specialized, not value-specialized), and mutated
+    from whatever thread scores — the dispatcher, a direct caller, a
+    gateway worker — so every access is under one lock.  Without a bound
+    a long-lived server with diverse document lengths compiles one scorer
+    per distinct bucket signature *forever*; ``capacity`` caps the cache
+    and ``evictions`` counts what fell out (surfaced in
+    ``QueryServer.stats()["bucket_evictions"]``)."""
+
+    def __init__(self, capacity: Optional[int]):
+        self._cap = capacity                  # None = unbounded
+        self._fns: "collections.OrderedDict" = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self._evictions = 0
+
+    def get(self, sig):
+        with self._lock:
+            fn = self._fns.get(sig)
+            if fn is not None:
+                self._fns.move_to_end(sig)    # LRU touch
+            return fn
+
+    def put(self, sig, fn) -> None:
+        with self._lock:
+            self._fns[sig] = fn
+            self._fns.move_to_end(sig)
+            while self._cap is not None and len(self._fns) > self._cap:
+                self._fns.popitem(last=False)
+                self._evictions += 1
+
+    def contains(self, sig) -> bool:
+        """Membership without the LRU touch (the EXPLAIN warm/cold probe
+        must not reorder the cache it is only asking about)."""
+        with self._lock:
+            return sig in self._fns
+
+    @property
+    def evictions(self) -> int:
+        with self._lock:
+            return self._evictions
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._fns)
 
 
 @dataclasses.dataclass
@@ -49,10 +100,15 @@ class FoldInConfig:
     ``max(min_cap, next_pow2(n))`` so request shapes collapse onto few
     compiles; ``None`` = exact shapes (one compile per distinct shape —
     the bitwise-reference mode).
+    ``max_compiled`` — LRU bound on the compiled-bucket cache (``None`` =
+    unbounded).  Long-lived servers with diverse document lengths
+    otherwise accumulate compiled scorers without bound; evictions are
+    counted (:attr:`FoldIn.bucket_evictions`).
     """
     local_iters: int = 10
     bucket: Optional[str] = "pow2"
     min_cap: int = 64
+    max_compiled: Optional[int] = 64
 
     def __post_init__(self):
         if self.local_iters < 0:
@@ -60,6 +116,9 @@ class FoldInConfig:
         if self.bucket not in (None, "exact", "pow2"):
             raise ValueError(f"unknown bucket policy {self.bucket!r}; "
                              f"choose 'pow2', 'exact', or None")
+        if self.max_compiled is not None and self.max_compiled < 1:
+            raise ValueError("max_compiled must be >= 1 (or None for "
+                             "an unbounded cache)")
 
 
 @dataclasses.dataclass
@@ -107,7 +166,8 @@ class FoldIn:
         self._proto = _blank_model(model)
         self._globals = {n: jnp.asarray(v, jnp.float32)
                          for n, v in posterior.globals().items()}
-        self._fns: dict = {}         # caps signature -> compiled scorer
+        # caps signature -> compiled scorer (bounded LRU, lock inside)
+        self._fns = _BucketCache(self.cfg.max_compiled)
 
     def with_posterior(self, posterior: Posterior) -> "FoldIn":
         """A :class:`FoldIn` serving ``posterior`` that reuses this one's
@@ -149,18 +209,18 @@ class FoldIn:
         """Distinct bucket signatures compiled so far (cache size)."""
         return len(self._fns)
 
+    @property
+    def bucket_evictions(self) -> int:
+        """Compiled scorers evicted from the bounded bucket cache."""
+        return self._fns.evictions
+
     # -- scoring -----------------------------------------------------------
 
-    def score(self, values, segment_ids=None, lengths=None, *,
-              observed: str = None, bindings: dict = None) -> FoldInResult:
-        """Fold in one batch of documents and score it.
-
-        ``values`` — observed category indices, documents back to back;
-        ``segment_ids``/``lengths`` — the ragged document structure (as in
-        ``Model.observe``).  ``observed`` names the RV the data binds to
-        (optional when the artifact records exactly one); ``bindings``
-        supplies intermediate ``?``-plate parent maps (``Model.bind``, e.g.
-        SLDA's sentence->document map)."""
+    def _prepare(self, values, segment_ids, lengths, observed, bindings):
+        """The host-side metadata pass shared by :meth:`score` and
+        :meth:`plan`: bind the request onto a blank model, compile, slice
+        + pad to the bucket, and return everything dispatch needs —
+        ``(program, arrays, dirs, caps, n_tok, n_docs, n_seg, sig)``."""
         if observed is None:
             if len(self.posterior.observed) != 1:
                 raise ValueError(
@@ -188,15 +248,45 @@ class FoldIn:
         arrays, dirs, caps, n_tok = slice_arrays(
             program, np.arange(n_docs), caps_fn)
         n_seg = self._caps_fn("__groups__", n_docs)
+        sig = (("__groups__", n_seg),) + tuple(sorted(caps.items()))
+        return program, arrays, dirs, caps, n_tok, n_docs, n_seg, sig
+
+    def plan(self, lengths, *, observed: str = None,
+             bindings: dict = None) -> dict:
+        """The dispatch a request with these document ``lengths`` would
+        take, without scoring anything (the gateway's EXPLAIN path): the
+        padded bucket ``caps`` and cache ``signature``, document/token
+        counts, and whether that bucket's scorer is already compiled
+        (``warm``).  Token *values* never influence a plan — only extents
+        do — so zeros stand in for the payload."""
+        lengths = np.asarray(lengths, np.int64).ravel()
+        values = np.zeros(int(lengths.sum()), np.int32)
+        _, _, _, caps, n_tok, n_docs, n_seg, sig = self._prepare(
+            values, None, lengths, observed, bindings)
+        return {"signature": sig, "caps": dict(caps), "n_seg": int(n_seg),
+                "n_docs": int(n_docs), "n_tokens": int(n_tok),
+                "warm": self._fns.contains(sig)}
+
+    def score(self, values, segment_ids=None, lengths=None, *,
+              observed: str = None, bindings: dict = None) -> FoldInResult:
+        """Fold in one batch of documents and score it.
+
+        ``values`` — observed category indices, documents back to back;
+        ``segment_ids``/``lengths`` — the ragged document structure (as in
+        ``Model.observe``).  ``observed`` names the RV the data binds to
+        (optional when the artifact records exactly one); ``bindings``
+        supplies intermediate ``?``-plate parent maps (``Model.bind``, e.g.
+        SLDA's sentence->document map)."""
+        program, arrays, dirs, caps, n_tok, n_docs, n_seg, sig = \
+            self._prepare(values, segment_ids, lengths, observed, bindings)
         seg = _segment_arrays(program, caps, dirs, n_seg)
 
-        sig = (("__groups__", n_seg),) + tuple(sorted(caps.items()))
         fn = self._fns.get(sig)
         if fn is None:
             from repro.core.svi import build_local_scorer
             fn = build_local_scorer(program, caps, self.cfg.local_iters,
                                     extras=True, n_seg=n_seg)
-            self._fns[sig] = fn
+            self._fns.put(sig, fn)
 
         import jax.numpy as jnp
         dev = {k: {kk: None if vv is None else jnp.asarray(vv)

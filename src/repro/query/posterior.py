@@ -148,6 +148,11 @@ class Posterior:
                 f"posterior artifact at {directory} has format version "
                 f"{version!r}; this build reads version {FORMAT_VERSION} "
                 f"— re-freeze the posterior with this build")
+        if doc.get("compact"):
+            # compacted artifacts store sparse top-k/bf16 tables; the
+            # compaction layer owns their layout (and its error record)
+            from repro.gateway.compact import load_compacted
+            return load_compacted(directory, doc)
         from repro.checkpoint import store
         tree = store.restore(directory, {n: 0 for n in doc["names"]},
                              step=_STEP)
@@ -179,17 +184,21 @@ class Posterior:
         a = self._conc(name)
         return a / a.sum(-1, keepdims=True)
 
-    def credible_interval(self, name: str, prob: float = 0.9):
+    def credible_interval(self, name: str, prob: float = 0.9, rows=None):
         """Equal-tailed marginal credible interval per cell.
 
         Under ``Dir(alpha)`` each component's marginal is
         ``Beta(alpha_k, alpha_0 - alpha_k)``; the interval is that Beta's
         ``[(1-prob)/2, 1-(1-prob)/2]`` quantile pair, computed by bisection
         on the regularized incomplete beta (no scipy dependency).  Returns
-        ``(lo, hi)``, each the table's shape."""
+        ``(lo, hi)``, each the table's shape — or, with ``rows`` (an index
+        or index array), just those rows' worth of bisection (a
+        single-row query need not pay for the whole table)."""
         if not 0.0 < prob < 1.0:
             raise ValueError(f"prob must be in (0, 1), got {prob}")
         a = self._conc(name)
+        if rows is not None:
+            a = np.atleast_2d(a[rows])
         b = a.sum(-1, keepdims=True) - a
         lo_q = (1.0 - prob) / 2.0
         return (_beta_quantile(a, b, lo_q),
@@ -197,14 +206,15 @@ class Posterior:
 
     def top_k(self, name: str, k: int = 10):
         """The ``k`` highest-mean columns per row: ``(indices, probs)``,
-        both ``(G, k)``, sorted descending (top words per topic)."""
+        both ``(G, k)``, sorted descending (top words per topic).
+
+        Ties break toward the smaller column index (stable sort), so the
+        result is deterministic — argpartition's unstable tie order used
+        to flap across backends/runs for tables with repeated values."""
         p = self.mean(name)
         k = min(k, p.shape[-1])
-        idx = np.argpartition(-p, k - 1, axis=-1)[..., :k]
-        probs = np.take_along_axis(p, idx, -1)
-        order = np.argsort(-probs, axis=-1)
-        return (np.take_along_axis(idx, order, -1),
-                np.take_along_axis(probs, order, -1))
+        idx = np.argsort(-p, axis=-1, kind="stable")[..., :k]
+        return idx, np.take_along_axis(p, idx, -1)
 
     def similarity(self, name: str, kind: str = "hellinger") -> np.ndarray:
         """Pairwise row similarity of a table's posterior means: ``(G, G)``

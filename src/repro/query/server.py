@@ -375,6 +375,8 @@ class QueryServer:
                 "docs_per_s": self._n_docs / dt,
                 "tokens_per_s": self._n_tokens / dt,
                 "compiled_buckets": self._foldin.compiled_buckets,
+                "bucket_evictions": getattr(
+                    self._foldin, "bucket_evictions", 0),
                 "artifact_version": self._version,
                 "swaps": self._swaps,
                 "queue_depth": self._q.qsize(),

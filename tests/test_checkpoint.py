@@ -226,3 +226,23 @@ def test_async_commit_failure_surfaces_in_wait(tmp_path):
     store.maybe_save(2, _tree(2.0))
     store.wait()                                     # errors were drained
     assert latest_step(str(tmp_path)) == 2
+
+
+def test_bfloat16_leaves_round_trip_bitwise(tmp_path):
+    """npz can't serialize ml_dtypes.bfloat16 (it loads back as raw void
+    bytes) — the store bitcasts such leaves to uint16 on write, records
+    the logical dtype as ``stored_as`` in the manifest, and views back on
+    read.  Checksums cover the same bytes either way."""
+    import ml_dtypes
+    bf16 = np.dtype(ml_dtypes.bfloat16)
+    rng = np.random.default_rng(0)
+    tree = {"vals": rng.gamma(1.0, 1.0, (4, 9)).astype(bf16),
+            "idx": np.arange(36, dtype=np.int32).reshape(4, 9)}
+    d = str(tmp_path)
+    save(d, 3, tree)
+    validate(os.path.join(d, "step_0000000003.npz"))   # checksums hold
+    out = restore(d, {"vals": 0, "idx": 0}, step=3)
+    assert out["vals"].dtype == bf16           # logical dtype restored
+    np.testing.assert_array_equal(out["vals"].view(np.uint16),
+                                  tree["vals"].view(np.uint16))
+    np.testing.assert_array_equal(out["idx"], tree["idx"])

@@ -1,0 +1,430 @@
+"""The multi-tenant serving gateway: QL parsing, plan/EXPLAIN routing,
+artifact registry + hot swap under load, tenant admission, and compacted
+artifacts with a measured error bound."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.gateway import (ArtifactRegistry, CompactedPosterior, Gateway,
+                           QLSyntaxError, QuotaExceededError, TenantQuota,
+                           TokenBucket, UnknownArtifactError,
+                           compact_posterior, parse, parse_script)
+from repro.gateway.plan import (CredibleQuery, ExplainQuery, PredictQuery,
+                                ShowQuery, SimilarityQuery, TopicsQuery)
+from repro.query import Posterior
+
+K, V = 3, 30
+
+
+def make_posterior(seed=0, scale=1.0, vocab=V):
+    """A synthetic frozen LDA posterior (no fit needed: the gateway
+    serves whatever concentrations an artifact carries)."""
+    rng = np.random.default_rng(seed)
+    return Posterior(
+        posteriors={
+            "phi": (scale * rng.gamma(2.0, 1.0, (K, vocab)) + 0.05
+                    ).astype(np.float32),
+            "theta": (rng.gamma(2.0, 1.0, (8, K)) + 0.1).astype(np.float32),
+        },
+        model="lda", params={"alpha": 0.1, "beta": 0.05, "K": K, "V": vocab},
+        local=("theta",), observed=("x",),
+        meta={"backend": "synthetic", "seed": seed})
+
+
+def make_sparse_posterior(seed=0, vocab=1200, hot=32):
+    """A synthetic posterior with realistically *sparse* topics (a few
+    heavy words over a tiny floor) — the shape compaction is for; a flat
+    table has no top-k worth keeping."""
+    rng = np.random.default_rng(seed)
+    phi = np.full((K, vocab), 0.01, np.float32)
+    for g in range(K):
+        idx = rng.choice(vocab, hot, replace=False)
+        phi[g, idx] += rng.gamma(3.0, 50.0, hot).astype(np.float32)
+    post = make_posterior(seed=seed, vocab=vocab)
+    post.posteriors["phi"] = phi
+    return post
+
+
+def make_docs(seed=0, n_docs=3, mean_len=20, vocab=V):
+    rng = np.random.default_rng(seed)
+    lengths = rng.integers(mean_len // 2, mean_len * 2, n_docs)
+    return {"values": rng.integers(0, vocab, int(lengths.sum()),
+                                   dtype=np.int32),
+            "lengths": lengths}
+
+
+@pytest.fixture(scope="module")
+def gw():
+    g = Gateway(max_delay_s=0.001)
+    g.register("lda-a", make_posterior(seed=0), version="a0")
+    g.register("lda-b", make_posterior(seed=1), version="b0")
+    yield g
+    g.stop()
+
+
+# ---------------------------------------------------------------------------
+# the query language
+# ---------------------------------------------------------------------------
+
+def test_ql_parses_every_statement_kind():
+    q = parse("TOPICS OF phi TOP 5")
+    assert q == TopicsQuery(rv="phi", k=5)
+    q = parse("topics of phi")                     # keywords fold case
+    assert q == TopicsQuery(rv="phi", k=10)
+    q = parse("SIMILARITY BETWEEN phi[0] AND phi[2] USING hellinger")
+    assert q == SimilarityQuery(rv="phi", metric="hellinger", pair=(0, 2))
+    q = parse("SIMILARITY OF phi USING cosine")
+    assert q == SimilarityQuery(rv="phi", metric="cosine", pair=None)
+    q = parse("CREDIBLE INTERVAL 0.9 FOR theta[3]")
+    assert q == CredibleQuery(rv="theta", prob=0.9, row=3)
+    q = parse("PREDICT LL FOR DOCS $batch USING ARTIFACT 'lda-v7'")
+    assert q == PredictQuery(payload="batch", artifact="lda-v7")
+    q = parse("EXPLAIN PREDICT LL FOR DOCS $b")
+    assert isinstance(q, ExplainQuery) and q.inner.payload == "b"
+    assert parse("SHOW ARTIFACTS") == ShowQuery(what="artifacts")
+    assert parse("SHOW STATS;") == ShowQuery(what="stats")
+
+
+def test_ql_round_trips_through_to_text():
+    for text in ["TOPICS OF phi TOP 5",
+                 "SIMILARITY BETWEEN phi[0] AND phi[2] USING hellinger",
+                 "SIMILARITY OF phi USING cosine",
+                 "CREDIBLE INTERVAL 0.9 FOR theta[3]",
+                 "PREDICT LL FOR DOCS $batch USING ARTIFACT 'lda-v7'",
+                 "EXPLAIN TOPICS OF phi TOP 10"]:
+        assert parse(parse(text).to_text()) == parse(text)
+
+
+def test_ql_script_splits_statements_and_strips_comments():
+    plans = parse_script("""
+        -- the morning dashboard
+        TOPICS OF phi TOP 3;
+        SHOW STATS;          -- trailing comment
+        CREDIBLE INTERVAL 0.5 FOR phi
+    """)
+    assert [p.kind for p in plans] == ["topics", "show", "credible"]
+
+
+@pytest.mark.parametrize("bad, match", [
+    ("TOPICS phi", "expected OF"),
+    ("TOPICS OF phi TOP 0", "TOP count"),
+    ("SIMILARITY BETWEEN phi[0] AND theta[1]", "one table"),
+    ("CREDIBLE INTERVAL 1.5 FOR phi", r"in \(0, 1\)"),
+    ("PREDICT LL FOR DOCS batch", r"\$payload"),
+    ("EXPLAIN SHOW STATS", "cannot EXPLAIN"),
+    ("TOPICS OF phi; TOPICS", "expected OF"),      # second stmt truncated
+    ("FROBNICATE phi", "expected a query"),
+    ("TOPICS OF phi USING ARTIFACT lda", "quoted artifact id"),
+])
+def test_ql_rejects_bad_input_with_caret(bad, match):
+    with pytest.raises(QLSyntaxError, match=match) as ei:
+        parse_script(bad)
+    assert "^" in str(ei.value)                   # caret rendering
+
+
+# ---------------------------------------------------------------------------
+# admission
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_token_bucket_debits_and_refills():
+    clk = FakeClock()
+    b = TokenBucket(rate=10.0, burst=5.0, clock=clk)
+    for _ in range(5):
+        assert b.try_acquire(1.0) == 0.0
+    retry = b.try_acquire(1.0)                     # empty: 1 token / 10 qps
+    assert retry == pytest.approx(0.1)
+    clk.t += 0.1
+    assert b.try_acquire(1.0) == 0.0
+    assert b.try_acquire(100.0) > 0.0              # > burst: never in one go
+
+
+def test_gateway_enforces_tenant_quota(gw):
+    gw.set_quota("scraper", TenantQuota(rate=1.0, burst=2.0))
+    gw.query("TOPICS OF phi", tenant="scraper")
+    gw.query("TOPICS OF phi", tenant="scraper")
+    with pytest.raises(QuotaExceededError) as ei:
+        gw.query("TOPICS OF phi", tenant="scraper")
+    assert ei.value.retry_after > 0.0
+    stats = gw.stats()["tenants"]["scraper"]
+    assert stats["rejected"] >= 1 and stats["served"] >= 2
+
+
+def test_predict_charges_per_document(gw):
+    gw.set_quota("bulk", TenantQuota(rate=0.001, burst=4.0))
+    docs = make_docs(n_docs=3)
+    gw.query("PREDICT LL FOR DOCS $d USING ARTIFACT 'lda-a'",
+             params={"d": docs}, tenant="bulk")    # 3 of 4 tokens
+    with pytest.raises(QuotaExceededError):        # 3 more won't fit
+        gw.query("PREDICT LL FOR DOCS $d USING ARTIFACT 'lda-a'",
+                 params={"d": docs}, tenant="bulk")
+    gw.query("TOPICS OF phi", tenant="bulk")       # but a 1-token query does
+
+
+# ---------------------------------------------------------------------------
+# routing + execution + EXPLAIN contract
+# ---------------------------------------------------------------------------
+
+def test_statistical_queries_route_and_answer(gw):
+    r = gw.query("TOPICS OF phi TOP 5 USING ARTIFACT 'lda-a'")
+    assert r.value["indices"].shape == (K, 5)
+    assert r.artifact == "lda-a" and r.version == "a0"
+    assert "posterior.top_k" in r.route
+
+    r = gw.query("SIMILARITY BETWEEN phi[0] AND phi[2] USING hellinger")
+    assert 0.0 <= r.value["similarity"] <= 1.0
+
+    r = gw.query("SIMILARITY OF phi USING cosine")
+    assert r.value["matrix"].shape == (K, K)
+
+    r = gw.query("CREDIBLE INTERVAL 0.9 FOR phi[1]")
+    assert r.value["lo"].shape == (V,)
+    assert (r.value["lo"] <= r.value["hi"]).all()
+
+    r = gw.query("PREDICT LL FOR DOCS $d", params={"d": make_docs()},
+                 timeout_s=30)
+    assert r.value["doc_ll"].shape == (3,)
+    assert np.isfinite(r.value["per_token_ll"])
+
+
+def test_explain_route_matches_executed_route(gw):
+    docs = make_docs(seed=3)
+    for text in ["TOPICS OF phi TOP 5 USING ARTIFACT 'lda-b'",
+                 "SIMILARITY BETWEEN phi[0] AND phi[1] USING hellinger",
+                 "CREDIBLE INTERVAL 0.8 FOR theta[0]",
+                 "PREDICT LL FOR DOCS $d USING ARTIFACT 'lda-a'"]:
+        ex = gw.query(f"EXPLAIN {text}", params={"d": docs})
+        ran = gw.query(text, params={"d": docs}, timeout_s=30)
+        assert ex.route == ran.route, text
+        assert f"route: {ran.route}" in ex.value["text"]
+
+
+def test_explain_predict_reports_bucket_and_kernel_routes(gw):
+    text = gw.explain("PREDICT LL FOR DOCS $d USING ARTIFACT 'lda-a'",
+                      params={"d": make_docs(seed=4)})
+    assert "bucket caps:" in text
+    assert "kernel routes" in text and "latent z" in text
+    # a second identical payload hits the warm scorer
+    text = gw.explain("PREDICT LL FOR DOCS $d USING ARTIFACT 'lda-a'",
+                      params={"d": make_docs(seed=4)})
+    assert "scorer warm" in text
+
+
+def test_show_artifacts_and_stats_shape(gw):
+    gw.query("TOPICS OF phi USING ARTIFACT 'lda-a'", tenant="alice")
+    r = gw.query("SHOW ARTIFACTS")
+    ids = [a["artifact"] for a in r.value["artifacts"]]
+    assert "lda-a" in ids and "lda-b" in ids
+
+    s = gw.stats()
+    assert "alice" in s["tenants"]
+    ten = s["tenants"]["alice"]
+    for key in ("served", "rejected", "errors", "throughput_qps",
+                "latency_p50_ms", "latency_p95_ms", "latency_p99_ms"):
+        assert key in ten
+    art = s["artifacts"]["lda-a"]
+    assert art["server"]["compiled_buckets"] >= 0
+    assert "bucket_evictions" in art["server"]
+    assert art["server"]["version"] == "a0"
+
+
+def test_unknown_artifact_and_rv_fail_cleanly(gw):
+    with pytest.raises(UnknownArtifactError, match="nope"):
+        gw.query("TOPICS OF phi USING ARTIFACT 'nope'")
+    with pytest.raises(KeyError, match="ghost"):
+        gw.query("TOPICS OF ghost USING ARTIFACT 'lda-a'")
+    # the failed query is charged and recorded as a tenant error
+    assert gw.stats()["tenants"]["default"]["errors"] >= 1
+
+
+def test_unnamed_artifact_routes_to_default(gw):
+    r = gw.query("TOPICS OF phi")
+    assert r.artifact == "lda-a"                  # first registered
+
+
+# ---------------------------------------------------------------------------
+# registry lifecycle
+# ---------------------------------------------------------------------------
+
+def test_register_duplicate_and_retire():
+    with ArtifactRegistry() as reg:
+        reg.register("m", make_posterior(), version="v0")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register("m", make_posterior())
+        reg.register("n", make_posterior(seed=5), version="n0")
+        reg.retire("m")
+        with pytest.raises(UnknownArtifactError):
+            reg.get("m")
+        assert reg.get().artifact_id == "n"        # default follows retire
+        with pytest.raises(UnknownArtifactError):
+            reg.retire("m")
+
+
+def test_swap_keeps_cache_warm_and_relabels():
+    with ArtifactRegistry() as reg:
+        entry = reg.register("m", make_posterior(seed=0), version="v0")
+        fut = entry.server.submit(make_docs()["values"],
+                                  lengths=make_docs()["lengths"])
+        assert fut.result(timeout=60).artifact_version == "v0"
+        warm = entry.foldin.compiled_buckets
+        assert warm >= 1
+        v = reg.swap("m", make_posterior(seed=9), "v1")
+        assert v == "v1" and entry.version == "v1"
+        # same family -> the compiled bucket cache rode along
+        assert entry.foldin.compiled_buckets == warm
+        d = make_docs()
+        r = entry.server.submit(d["values"], lengths=d["lengths"]) \
+            .result(timeout=60)
+        assert r.artifact_version == "v1"
+        assert entry.foldin.compiled_buckets == warm   # no recompile
+
+
+def test_concurrent_swap_and_submit_across_artifacts():
+    """Satellite: hammer two artifacts with concurrent submits while both
+    are being swapped; every future resolves, no response ever carries the
+    other artifact's version, and stop() strands nothing."""
+    reg = ArtifactRegistry(server_defaults={"max_delay_s": 0.001})
+    reg.register("A", make_posterior(seed=0), version="A-v0")
+    reg.register("B", make_posterior(seed=1), version="B-v0")
+    futures = {"A": [], "B": []}
+    errors = []
+    stop_swapping = threading.Event()
+
+    def submitter(aid, seed):
+        rng = np.random.default_rng(seed)
+        for i in range(25):
+            d = make_docs(seed=int(rng.integers(1 << 30)), n_docs=2)
+            try:
+                futures[aid].append(
+                    reg.get(aid).server.submit(d["values"],
+                                               lengths=d["lengths"]))
+            except RuntimeError:
+                errors.append(("submit", aid, i))
+
+    def swapper(aid):
+        n = 0
+        while not stop_swapping.is_set():
+            n += 1
+            reg.swap(aid, make_posterior(seed=100 + n),
+                     version=f"{aid}-v{n}")
+            time.sleep(0.002)
+
+    threads = [threading.Thread(target=submitter, args=(aid, s))
+               for s, aid in enumerate(["A", "B", "A", "B"])]
+    swappers = [threading.Thread(target=swapper, args=(aid,))
+                for aid in ("A", "B")]
+    for t in threads + swappers:
+        t.start()
+    for t in threads:
+        t.join()
+    stop_swapping.set()
+    for t in swappers:
+        t.join()
+
+    assert not errors
+    for aid, futs in futures.items():
+        assert len(futs) == 50
+        for f in futs:
+            r = f.result(timeout=60)               # every future resolves
+            assert r.artifact_version.startswith(f"{aid}-v"), \
+                f"{aid} answered by {r.artifact_version}"
+
+    # stop() drains: late submits fail fast, nothing hangs
+    reg.stop()
+    with pytest.raises(UnknownArtifactError):
+        reg.get("A")
+    with pytest.raises(RuntimeError):
+        reg.register("C", make_posterior())
+
+
+# ---------------------------------------------------------------------------
+# compaction
+# ---------------------------------------------------------------------------
+
+def test_compaction_ratio_error_and_bitwise_round_trip(tmp_path):
+    post = make_sparse_posterior(seed=7)
+    comp = compact_posterior(post, top_k=64)
+    assert isinstance(comp, CompactedPosterior)
+    assert comp.compression_ratio() >= 4.0
+
+    # the recorded error is measured, not assumed: recompute it
+    for name, rec in comp.compaction.items():
+        p = post.mean(name)
+        q = comp.mean(name)
+        tv = float(0.5 * np.abs(p - q).sum(-1).max())
+        assert rec["tv_error"] == pytest.approx(tv, abs=1e-6)
+    assert comp.error_bound == max(r["tv_error"]
+                                   for r in comp.compaction.values())
+    assert comp.error_bound < 0.02                 # bounded, not just known
+
+    path = str(tmp_path / "lite")
+    comp.save(path)
+    loaded = Posterior.load(path)
+    assert isinstance(loaded, CompactedPosterior)
+    assert loaded.error_bound == comp.error_bound
+    for n in comp.posteriors:                      # bitwise pre/post save
+        np.testing.assert_array_equal(loaded.posteriors[n],
+                                      comp.posteriors[n])
+
+
+def test_compaction_dense_bf16_mode_and_guards():
+    post = make_posterior(seed=8)                  # V=30 <= top_k
+    comp = compact_posterior(post, top_k=64)
+    assert all(r["k"] == r["shape"][1] for r in comp.compaction.values())
+    assert not any(n.endswith("__idx") for n in comp.compact_tables)
+    assert comp.error_bound < 0.01                 # bf16 rounding only
+    with pytest.raises(ValueError, match="already compacted"):
+        compact_posterior(comp)
+    with pytest.raises(ValueError, match="top_k"):
+        compact_posterior(post, top_k=0)
+
+
+def test_gateway_serves_compacted_with_error_bound(tmp_path):
+    post = make_sparse_posterior(seed=7)
+    comp = compact_posterior(post, top_k=64)
+    with Gateway() as g:
+        g.register("full", post, version="f0")
+        g.register("lite", comp, version="l0")
+        rf = g.query("TOPICS OF phi TOP 5 USING ARTIFACT 'full'")
+        rl = g.query("TOPICS OF phi TOP 5 USING ARTIFACT 'lite'")
+        assert rf.error_bound is None
+        assert rl.error_bound == comp.error_bound
+        # top words agree within the measured bound's reach
+        assert (rf.value["indices"][:, 0] == rl.value["indices"][:, 0]).all()
+        ex = g.query("EXPLAIN TOPICS OF phi USING ARTIFACT 'lite'")
+        assert "compacted: yes" in ex.value["text"]
+        show = g.query("SHOW ARTIFACTS")
+        lite = [a for a in show.value["artifacts"]
+                if a["artifact"] == "lite"][0]
+        assert lite["compacted"] and lite["error_bound"] > 0
+
+
+def test_gateway_predict_on_compacted_stays_close(tmp_path):
+    post = make_sparse_posterior(seed=11)
+    comp = compact_posterior(post, top_k=256)
+    # documents drawn from the model's own topics (tokens land on the
+    # kept cells, as real traffic against a fitted artifact would)
+    rng = np.random.default_rng(12)
+    docs = {"values": rng.choice(1200, 60, p=post.mean("phi")[0]
+                                 ).astype(np.int32),
+            "lengths": [25, 35]}
+    with Gateway() as g:
+        g.register("full", post)
+        g.register("lite", comp)
+        rf = g.query("PREDICT LL FOR DOCS $d USING ARTIFACT 'full'",
+                     params={"d": docs}, timeout_s=60)
+        rl = g.query("PREDICT LL FOR DOCS $d USING ARTIFACT 'lite'",
+                     params={"d": docs}, timeout_s=60)
+        assert rl.error_bound is not None
+        assert rl.value["per_token_ll"] == pytest.approx(
+            rf.value["per_token_ll"], rel=0.02)

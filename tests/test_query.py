@@ -289,3 +289,46 @@ def test_server_stop_fails_queued_requests(fitted):
     srv.stop()
     with pytest.raises(RuntimeError, match="stopped"):
         fut.result(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# determinism + cache bounds (gateway-era hardening)
+# ---------------------------------------------------------------------------
+
+def test_top_k_deterministic_under_ties():
+    """Tied means must break toward the smaller column index, every time —
+    argpartition's unstable order used to flap across runs/backends."""
+    conc = np.array([[2.0, 5.0, 2.0, 5.0, 2.0, 1.0],
+                     [3.0, 3.0, 3.0, 3.0, 3.0, 3.0]], np.float32)
+    post = Posterior(posteriors={"phi": conc}, model="lda",
+                     params={}, local=(), observed=("x",), meta={})
+    idx, probs = post.top_k("phi", 4)
+    np.testing.assert_array_equal(idx[0], [1, 3, 0, 2])   # ties: low index
+    np.testing.assert_array_equal(idx[1], [0, 1, 2, 3])   # all tied
+    for _ in range(5):                                    # and stays put
+        again, _ = post.top_k("phi", 4)
+        np.testing.assert_array_equal(idx, again)
+    assert (np.diff(probs, axis=-1) <= 0).all()
+
+
+def test_foldin_compile_cache_is_bounded_lru(fitted):
+    """max_compiled bounds the compiled-bucket cache; evictions are
+    counted and surface through QueryServer.stats()."""
+    corpus = fitted["corpus"]
+    fold = FoldIn(fitted["posterior"],
+                  FoldInConfig(local_iters=1, bucket="exact",
+                               max_compiled=2))
+    offs = np.concatenate([[0], np.cumsum(corpus["lengths"])])
+    for i in range(4):           # exact bucketing: one compile per length
+        fold.score(corpus["tokens"][offs[i]:offs[i] + 5 + i])
+    assert fold.compiled_buckets <= 2
+    assert fold.bucket_evictions >= 2
+    with QueryServer(fold) as srv:
+        stats = srv.stats()
+    assert stats["bucket_evictions"] == fold.bucket_evictions
+    # LRU: re-scoring the most recent length compiles nothing new
+    before = fold.bucket_evictions
+    fold.score(corpus["tokens"][offs[3]:offs[3] + 8])
+    assert fold.bucket_evictions == before
+    with pytest.raises(ValueError, match="max_compiled"):
+        FoldInConfig(max_compiled=0)
